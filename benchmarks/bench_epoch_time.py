@@ -1,0 +1,48 @@
+"""Paper Figures 1 & 2: epoch time and throughput versus number of workers.
+
+The paper's cluster (V100s over a parameter server) is replaced by the time
+model calibrated on this repo's roofline constants: one measured CPU step
+provides the *compute* term shape; communication is the analytic ring
+all-reduce over the v5e fabric (ICI within a pod, DCN across pods), with the
+per-algorithm amortization the paper derives (1, 1/H, 2/H).
+
+The reproduced claims: comm grows with workers for synchronous AdaGrad/
+AdaAlter; Local AdaAlter's curve stays near the "no-communication" lower
+bound; larger H approaches it.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs import get_arch
+from repro.core.comm import FabricModel, step_time
+from repro.models.counting import count_params
+
+# Paper's epoch: 20_000 steps x 8 workers x 256 batch.
+STEPS_PER_EPOCH = 20_000
+BATCH_PER_WORKER = 256
+COMPUTE_S = 0.55                      # nominal per-step compute (paper ~0.5s)
+
+ALGOS = [("adagrad", 1), ("adaalter", 1), ("local_adaalter", 4),
+         ("local_adaalter", 8), ("local_adaalter", 16), ("none", 1)]
+
+
+def run(workers_list=(1, 2, 4, 8, 16, 32), cross_pod_at: int = 16) -> List[Dict]:
+    n_params = count_params(get_arch("biglstm"))
+    fabric = FabricModel()
+    rows = []
+    for n in workers_list:
+        for name, H in ALGOS:
+            t = step_time(name, n_params, COMPUTE_S, n, H, fabric,
+                          cross_pod=n >= cross_pod_at)
+            label = (f"{name}-H{H}" if name.startswith("local")
+                     else ("ideal-compute-only" if name == "none" else name))
+            rows.append({
+                "bench": "epoch_time(fig1)+throughput(fig2)",
+                "method": label,
+                "workers": n,
+                "step_s": round(t, 4),
+                "epoch_hours": round(t * STEPS_PER_EPOCH / 3600, 3),
+                "throughput_samples_s": round(n * BATCH_PER_WORKER / t, 1),
+            })
+    return rows

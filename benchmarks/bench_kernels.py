@@ -1,0 +1,90 @@
+"""Kernel hot-spot benchmark: fused AdaAlter update vs the unfused lowering.
+
+Measures (a) wall time on CPU of the jitted fused oracle vs the unfused
+per-op sequence the naive optimizer emits, and (b) the HBM-traffic model
+(bytes) of both lowerings via the HLO cost walker — the fused kernel's
+claim is 4 reads + 2 writes vs 7 reads + 3 writes. Also allclose-checks the
+Pallas kernel (interpret mode) against the oracle at a production-ish size.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ops import leaf_fused_update
+from repro.kernels.ref import fused_update_ref
+from repro.roofline.hlo_cost import hlo_cost
+
+
+def _unfused(x, g, b2_sync, b2_local, eta, extra):
+    """The op-by-op lowering a generic optimizer library would emit."""
+    g32 = g.astype(jnp.float32)
+    denom_sq = b2_sync + extra
+    denom = jnp.sqrt(denom_sq)
+    norm_g = g32 / denom
+    upd = eta * norm_g
+    y = (x.astype(jnp.float32) - upd).astype(x.dtype)
+    sq = g32 * g32
+    new_b2 = b2_local + sq
+    return y, new_b2
+
+
+def _time(fn, *args, iters: int = 5) -> float:
+    fn(*args)[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        y, b = fn(*args)
+    y.block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def run(n: int = 1 << 22) -> List[Dict]:
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (n,), jnp.float32).astype(jnp.bfloat16)
+    g = (jax.random.normal(ks[1], (n,)) * 0.1).astype(jnp.bfloat16)
+    bs = jnp.abs(jax.random.normal(ks[2], (n,))) + 1.0
+    bl = bs + jnp.abs(jax.random.normal(ks[3], (n,))) * 0.1
+    eta, extra = 0.5, 4.0
+
+    fused = jax.jit(fused_update_ref)
+    unfused = jax.jit(_unfused)
+    t_fused = _time(fused, x, g, bs, bl, eta, extra)
+    t_unfused = _time(unfused, x, g, bs, bl, eta, extra)
+    t_eager = _time(lambda *a: _unfused(*a), x, g, bs, bl, eta, extra, iters=2)
+
+    # XLA auto-fuses the jitted elementwise chain (verified: both lowerings
+    # report identical HBM traffic), so the Pallas kernel's value on TPU is
+    # *guaranteeing* the fusion across donation/layout boundaries. The
+    # analytic traffic of the materialized (eager) sequence is the contrast.
+    cost_f = hlo_cost(jax.jit(fused_update_ref).lower(x, g, bs, bl, eta, extra)
+                      .compile().as_text())
+    bpe = {"x": 2, "g": 2, "bs": 4, "bl": 4}
+    eager_bytes = n * (  # 7 reads + 3 writes incl. materialized intermediates
+        bpe["g"] + 4 + bpe["bs"] + 4 + 4 + bpe["x"] + 4 +   # reads
+        4 + bpe["x"] + 4)                                    # writes
+    cost_u = hlo_cost(jax.jit(_unfused).lower(x, g, bs, bl, eta, extra)
+                      .compile().as_text())
+
+    # Pallas (interpret) correctness at this size
+    y_ref, b_ref = fused(x, g, bs, bl, eta, extra)
+    y_pl, b_pl = leaf_fused_update(x, g, bs, bl, eta, extra, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(y_pl, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=1e-2, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(b_pl), np.asarray(b_ref),
+                               rtol=1e-5, atol=1e-5)
+
+    return [{
+        "bench": "kernel(adaalter_fused_update)",
+        "method": m, "elements": n,
+        "us_per_call": round(t * 1e6, 1),
+        "hbm_bytes_model": int(b),
+        "pallas_interpret_allclose": True,
+    } for m, t, b in [("fused(jit)", t_fused, cost_f.bytes),
+                      ("unfused(jit,auto-fused)", t_unfused, cost_u.bytes),
+                      ("unfused(eager,materialized)", t_eager, eager_bytes)]]

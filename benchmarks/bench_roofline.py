@@ -1,0 +1,41 @@
+"""§Roofline table: renders the dry-run records (experiments/dryrun_baseline).
+
+Not a measurement itself — aggregates the per-(arch x shape x mesh) JSON
+records the dry-run wrote, one row per compiled program, so that
+``python -m benchmarks.run`` reproduces the EXPERIMENTS.md table from the
+artifacts. Skips silently (with a note) if the dry-run has not been run.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DEFAULT_DIR = os.path.join(os.path.dirname(__file__), os.pardir,
+                           "experiments", "dryrun_baseline_v2")
+
+
+def run(records_dir: str = "") -> List[Dict]:
+    d = records_dir or DEFAULT_DIR
+    files = sorted(glob.glob(os.path.join(d, "*.json")))
+    if not files:
+        return [{"bench": "roofline(dryrun)", "method": "missing",
+                 "note": f"run `python -m repro.launch.dryrun --out {d}` first"}]
+    rows = []
+    for fn in files:
+        with open(fn) as f:
+            result = json.load(f)
+        for rec in result["records"]:
+            rows.append({
+                "bench": "roofline(dryrun)",
+                "method": f"{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+                          f"/{rec.get('variant', '')}",
+                "t_compute_ms": round(rec["t_compute_s"] * 1e3, 3),
+                "t_memory_ms": round(rec["t_memory_s"] * 1e3, 3),
+                "t_collective_ms": round(rec["t_collective_s"] * 1e3, 3),
+                "dominant": rec["dominant"],
+                "useful_flop_ratio": round(rec["useful_flop_ratio"], 4),
+                "mfu_at_roofline": round(rec["mfu_at_roofline"], 4),
+            })
+    return rows

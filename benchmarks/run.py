@@ -1,0 +1,71 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  python -m benchmarks.run [--only convergence,kernels,...] [--csv out.csv]
+
+  bench_epoch_time   Fig. 1 (epoch time vs workers) + Fig. 2 (throughput)
+  bench_convergence  Fig. 3 + Table 2 (PPL per algorithm at equal epochs)
+  bench_kernels      fused AdaAlter update vs unfused lowering
+  bench_roofline     §Roofline table from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import io
+import sys
+import time
+
+ALL = ["epoch_time", "convergence", "kernels", "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default="",
+                    help=f"comma-separated subset of {ALL}")
+    ap.add_argument("--csv", default="", help="also write rows to this CSV")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller step counts (CI mode)")
+    args = ap.parse_args()
+    which = [w for w in (args.only.split(",") if args.only else ALL) if w]
+
+    rows = []
+    for name in which:
+        t0 = time.time()
+        print(f"== bench_{name}", flush=True)
+        if name == "epoch_time":
+            from benchmarks.bench_epoch_time import run as r
+            rows += r()
+        elif name == "convergence":
+            from benchmarks.bench_convergence import run as r
+            rows += r(steps=30 if args.quick else 120)
+        elif name == "kernels":
+            from benchmarks.bench_kernels import run as r
+            rows += r(n=(1 << 18) if args.quick else (1 << 22))
+        elif name == "roofline":
+            from benchmarks.bench_roofline import run as r
+            rows += r()
+        else:
+            print(f"   unknown bench {name!r}", file=sys.stderr)
+            continue
+        print(f"   done in {time.time() - t0:.1f}s ({len(rows)} rows total)",
+              flush=True)
+
+    # union of keys, stable order
+    keys = []
+    for row in rows:
+        for k in row:
+            if k not in keys:
+                keys.append(k)
+    buf = io.StringIO()
+    w = csv.DictWriter(buf, fieldnames=keys)
+    w.writeheader()
+    w.writerows(rows)
+    print(buf.getvalue())
+    if args.csv:
+        with open(args.csv, "w") as f:
+            f.write(buf.getvalue())
+        print(f"wrote {args.csv}")
+
+
+if __name__ == "__main__":
+    main()

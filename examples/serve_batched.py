@@ -1,0 +1,37 @@
+"""End-to-end serving driver: batched requests against a small model.
+
+Builds a reduced member of an assigned architecture family (default: the
+hybrid attn+SSM hymba — the interesting decode path), prefs a batch of
+prompts and greedy-decodes continuations, demonstrating the full
+prefill -> KV-cache/recurrent-state -> decode_step pipeline that the
+``decode_32k`` / ``long_500k`` dry-run shapes lower.
+
+  PYTHONPATH=src python examples/serve_batched.py --arch hymba-1.5b
+"""
+import argparse
+
+from repro.configs import get_arch, reduced
+from repro.launch.serve import serve_session
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="hymba-1.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = reduced(get_arch(args.arch))
+    print(f"serving {cfg.name} ({cfg.family}) — batch={args.batch}, "
+          f"prompt={args.prompt_len}, new={args.new_tokens}")
+    gen, tps = serve_session(cfg, batch=args.batch,
+                             prompt_len=args.prompt_len,
+                             new_tokens=args.new_tokens)
+    print(f"{tps:.1f} tok/s; generations:")
+    for i, row in enumerate(gen):
+        print(f"  request {i}: {row.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

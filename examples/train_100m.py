@@ -1,0 +1,54 @@
+"""End-to-end driver: train a ~100M-param model for a few hundred steps.
+
+The model is the paper's Big LSTM family at a width where the embedding +
+softmax + 2 LSTMP layers land near 100M parameters (the paper's own model is
+~1B because of its 793k-word vocabulary). Local AdaAlter (H=4) with warm-up,
+checkpointing every 50 steps, restartable.
+
+NOTE: a few hundred steps of a 100M model is hours of CPU time in this
+container; the default --steps 300 is the assignment's ask, use --steps 5
+for a quick verification (the smoke tests do exactly that).
+
+  PYTHONPATH=src python examples/train_100m.py --steps 300
+"""
+import argparse
+
+from repro.configs import ModelConfig, OptimizerConfig, ShapeConfig
+from repro.launch.train import train_loop
+from repro.models.counting import count_params
+
+
+def make_100m_lstm() -> ModelConfig:
+    # 2 LSTMP layers d=2048/proj 512 (the paper's real width) + 75k vocab
+    # x 512 embed + full softmax = ~96M params: laptop-trainable.
+    return ModelConfig(
+        name="biglstm-100m", family="lstm", n_layers=2, d_model=2048,
+        n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=75000, lstm_proj=512,
+        act="", param_dtype="float32",
+        source="LSTM-2048-512 of Jozefowicz et al. (paper's model), scaled")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--H", type=int, default=4)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_100m_ckpt")
+    args = ap.parse_args()
+
+    cfg = make_100m_lstm()
+    print(f"{cfg.name}: {count_params(cfg):,} params")
+    shape = ShapeConfig(name="e2e", seq_len=args.seq,
+                        global_batch=args.batch, kind="train")
+    opt = OptimizerConfig(name="local_adaalter", lr=0.5, H=args.H,
+                          warmup_steps=min(100, args.steps // 3))
+    res = train_loop(cfg, shape, opt, steps=args.steps,
+                     checkpoint_dir=args.checkpoint_dir, checkpoint_every=50,
+                     log_every=10)
+    print(f"final loss {res.final_loss:.4f} after {res.steps} steps "
+          f"({res.wall_s:.0f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Render EXPERIMENTS.md §Dry-run/§Roofline tables from the dry-run records."""
+import glob
+import json
+import os
+import sys
+
+D = os.environ.get("DRYRUN_DIR") or os.path.join(os.path.dirname(__file__), "dryrun_baseline_v2")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB", "PB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}EB"
+
+
+def main(mesh_filter="single"):
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(D, "*.json"))):
+        with open(fn) as f:
+            res = json.load(f)
+        if mesh_filter == "single" and not fn.endswith("_single.json"):
+            continue
+        if mesh_filter == "multi" and not fn.endswith("_multi.json"):
+            continue
+        for rec in res["records"]:
+            rows.append(rec)
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"]),
+                             r.get("variant", "")))
+    print("| arch | shape | variant | t_comp (ms) | t_mem (ms) | t_coll (ms) "
+          "| dominant | useful | MFU@roofline | AR bytes/chip | AG bytes/chip |")
+    print("|---|---|---|---:|---:|---:|---|---:|---:|---:|---:|")
+    for r in rows:
+        coll = r.get("collectives", {})
+        print(f"| {r['arch']} | {r['shape']} | {r.get('variant','')} "
+              f"| {r['t_compute_s']*1e3:,.1f} | {r['t_memory_s']*1e3:,.1f} "
+              f"| {r['t_collective_s']*1e3:,.1f} | {r['dominant']} "
+              f"| {r['useful_flop_ratio']:.3f} | {r['mfu_at_roofline']*100:.1f}% "
+              f"| {fmt_bytes(coll.get('all-reduce'))} "
+              f"| {fmt_bytes(coll.get('all-gather'))} |")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "single")

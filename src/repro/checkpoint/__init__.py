@@ -1,0 +1,4 @@
+"""Sharding-aware checkpointing (npz payload + JSON pytree manifest)."""
+from repro.checkpoint.store import save_checkpoint, restore_checkpoint, latest_step
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]

@@ -1,0 +1,70 @@
+"""Architecture/shape config registry.
+
+``get_arch(name)`` returns the full assigned config; ``get_shape(name)`` one
+of the four assigned input shapes; ``reduced(cfg)`` a smoke-test variant.
+"""
+from repro.configs.base import (
+    ModelConfig,
+    OptimizerConfig,
+    ParallelismPlan,
+    ShapeConfig,
+    TrainConfig,
+    reduced,
+)
+from repro.configs.shapes import SHAPES, get_shape
+
+from repro.configs import (  # noqa: E402  (registry imports)
+    biglstm,
+    hymba_1_5b,
+    llama3_405b,
+    llama4_maverick_400b_a17b,
+    llama_3_2_vision_11b,
+    mamba2_370m,
+    minitron_4b,
+    phi3_5_moe_42b_a6_6b,
+    phi4_mini_3_8b,
+    qwen2_7b,
+    seamless_m4t_large_v2,
+)
+
+# The 10 assigned architectures (public-pool) + the paper's own model.
+ARCHS = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        llama4_maverick_400b_a17b,
+        mamba2_370m,
+        seamless_m4t_large_v2,
+        qwen2_7b,
+        llama3_405b,
+        minitron_4b,
+        phi4_mini_3_8b,
+        llama_3_2_vision_11b,
+        hymba_1_5b,
+        phi3_5_moe_42b_a6_6b,
+        biglstm,
+    )
+}
+
+ASSIGNED = [n for n in ARCHS if n != "biglstm"]
+
+
+def get_arch(name: str) -> ModelConfig:
+    try:
+        return ARCHS[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}") from None
+
+
+__all__ = [
+    "ARCHS",
+    "ASSIGNED",
+    "SHAPES",
+    "ModelConfig",
+    "OptimizerConfig",
+    "ParallelismPlan",
+    "ShapeConfig",
+    "TrainConfig",
+    "get_arch",
+    "get_shape",
+    "reduced",
+]

@@ -1,0 +1,215 @@
+"""Configuration dataclasses for the repro framework.
+
+Every assigned architecture is expressed as a :class:`ModelConfig`; input
+shapes as :class:`ShapeConfig`; the paper's optimizers as
+:class:`OptimizerConfig`; and the distribution strategy as a
+:class:`ParallelismPlan` resolved against a concrete mesh at launch time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+Family = str  # 'dense' | 'moe' | 'ssm' | 'audio' | 'vlm' | 'hybrid' | 'lstm'
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters (transformer backbone or LSTM)."""
+
+    name: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                      # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    act: str = "swiglu"                    # 'swiglu' | 'gelu' | 'relu'
+    # --- MoE ---
+    n_experts: int = 0                     # 0 -> dense FFN
+    top_k: int = 1
+    moe_every: int = 1                     # MoE layer every k-th layer
+    dense_d_ff: int = 0                    # FFN width of non-MoE layers (0 -> d_ff)
+    shared_expert: bool = False            # llama4-style always-on shared expert
+    capacity_factor: float = 1.25
+    router_aux_loss: float = 0.01
+    # --- SSM (mamba2 / SSD) ---
+    ssm_state: int = 0                     # N (state dim); 0 -> no SSM path
+    ssm_expand: int = 2                    # d_inner = expand * d_model
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 64                    # SSD chunk length
+    ssm_conv: int = 4                      # depthwise conv width
+    # --- hybrid (hymba): both attn and ssm paths in parallel ---
+    hybrid: bool = False
+    # --- enc-dec (audio) ---
+    n_encoder_layers: int = 0              # >0 -> encoder-decoder model
+    # --- VLM ---
+    cross_attn_every: int = 0              # >0 -> cross-attn layer every k-th layer
+    n_image_tokens: int = 0                # patch-embedding tokens per sample (stub frontend)
+    # --- attention variants ---
+    sliding_window: int = 0                # 0 -> full causal attention
+    long_context_mode: str = ""            # '' | 'sliding_window' | 'ssm'
+    # --- LSTM (paper's Big LSTM) ---
+    lstm_proj: int = 0                     # LSTM-2048-512 projection size
+    # --- beyond-paper performance knobs (default False == paper-faithful
+    #     baseline; flipped by the '+opt' configs measured in §Perf) ---
+    attn_tp_pad: bool = False       # pad/repeat heads to divide the TP axis
+    attn_remat: bool = False        # flash-style recompute of attention bwd
+    fused_xent: bool = False        # sharded xent, no gathered logits, bf16 dL
+    moe_group_tokens: bool = False  # per-shard MoE dispatch (no T x E x C one-hots)
+    seq_parallel: bool = False      # Megatron-SP: residual stream sharded over TP
+    attn_bf16_probs: bool = False   # bf16 P·V in the flash scan (f32 m/l stats)
+    expert_axes_2d: bool = False    # experts sharded over (model, data): stationary weights
+    ssm_pallas: bool = False        # fused Pallas SSD chunk scan (inference fwd)
+    # --- numerics ---
+    param_dtype: str = "bfloat16"
+    accum_dtype: str = "float32"
+    # provenance
+    source: str = ""                       # citation for the config
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.n_heads, 1))
+        if self.n_experts and self.dense_d_ff == 0:
+            object.__setattr__(self, "dense_d_ff", self.d_ff)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.n_encoder_layers > 0
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim if self.ssm_state else 0
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for rooflines; exact for our impl)."""
+        from repro.models.counting import count_params
+        return count_params(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.counting import count_active_params
+        return count_active_params(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One of the four assigned input shapes."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                              # 'train' | 'prefill' | 'decode'
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    """Paper algorithms 1-4 plus plain SGD."""
+
+    name: str = "local_adaalter"           # 'sgd'|'adagrad'|'adaalter'|'local_sgd'|'local_adaalter'
+    lr: float = 0.5                        # paper default (8 workers x bs 256)
+    eps: float = 1.0                       # paper: eps = 1
+    b0: float = 1.0                        # paper: b0 = 1
+    H: int = 4                             # paper's best comm/noise trade-off
+    warmup_steps: int = 600                # paper: 600
+    grad_clip: float = 0.0                 # 0 -> off
+    use_pallas: bool = False               # fused Pallas update kernel
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelismPlan:
+    """How the mesh axes are used for a given (arch, shape).
+
+    local_axes : mesh axes enumerating local-SGD workers (replicas diverge
+                 between syncs; synced every H steps by Local AdaAlter).
+    grad_axes  : mesh axes over which gradients are pmean'd EVERY step
+                 (classic data parallelism inside a worker).
+    fsdp_axes  : mesh axes over which each worker's params/optimizer state
+                 are sharded (ZeRO-3); must be a subset of grad_axes.
+    tp_axis    : tensor-parallel axis name.
+    """
+
+    local_axes: Tuple[str, ...] = ("data",)
+    grad_axes: Tuple[str, ...] = ()
+    fsdp_axes: Tuple[str, ...] = ()
+    tp_axis: str = "model"
+    weight_gather_serving: bool = False
+    remat: str = "none"                    # 'none' | 'full' | 'dots'
+
+    def n_workers(self, mesh) -> int:
+        n = 1
+        for ax in self.local_axes:
+            n *= mesh.shape[ax]
+        return n
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """End-to-end training run configuration."""
+
+    model: ModelConfig
+    shape: ShapeConfig
+    optimizer: OptimizerConfig = OptimizerConfig()
+    seed: int = 0
+    steps: int = 100
+    log_every: int = 10
+    eval_every: int = 0
+    checkpoint_every: int = 0
+    checkpoint_dir: str = ""
+    non_iid: bool = True                   # paper assumption: D_i != D_j
+
+
+def reduced(cfg: ModelConfig, *, n_layers: int = 2, d_model: int = 256,
+            max_experts: int = 4, vocab: int = 512) -> ModelConfig:
+    """A smoke-test-sized member of the same architecture family.
+
+    (<=2 layers, d_model<=512, <=4 experts, small vocab) as required by the
+    assignment; keeps every structural feature (GQA ratio, MoE, SSM, hybrid,
+    enc-dec, cross-attn) intact so the smoke test exercises the same code path
+    as the full config.
+    """
+    n_heads = max(4, min(cfg.n_heads, 8))
+    # Preserve GQA grouping if the full config has it.
+    n_kv = n_heads if cfg.n_kv_heads == cfg.n_heads else max(1, n_heads // 4)
+    head_dim = max(16, d_model // n_heads)
+    d_model = n_heads * head_dim
+    changes = dict(
+        n_layers=n_layers,
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=head_dim,
+        d_ff=4 * d_model if cfg.d_ff else 0,
+        dense_d_ff=4 * d_model if cfg.dense_d_ff else 0,
+        vocab_size=vocab,
+        n_experts=min(cfg.n_experts, max_experts),
+        n_encoder_layers=n_layers if cfg.is_encdec else 0,
+        cross_attn_every=2 if cfg.cross_attn_every else 0,
+        n_image_tokens=16 if cfg.cross_attn_every else 0,
+        ssm_state=min(cfg.ssm_state, 16) if cfg.ssm_state else 0,
+        ssm_head_dim=32 if cfg.ssm_state else 64,
+        ssm_chunk=16 if cfg.ssm_state else 64,
+        sliding_window=min(cfg.sliding_window, 64) if cfg.sliding_window else 0,
+        lstm_proj=min(cfg.lstm_proj, 64) if cfg.lstm_proj else 0,
+        moe_every=cfg.moe_every,
+        name=cfg.name + "-smoke",
+    )
+    return dataclasses.replace(cfg, **changes)

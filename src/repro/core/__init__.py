@@ -1,0 +1,27 @@
+"""The paper's primary contribution: AdaAlter / Local AdaAlter optimizers,
+their synchronous baselines, and the communication accounting."""
+from repro.core.optimizers import (
+    LocalOptimizer,
+    Optimizer,
+    adaalter,
+    adagrad,
+    is_local,
+    local_adaalter,
+    local_sgd,
+    make_optimizer,
+    sgd,
+    warmup_lr,
+)
+
+__all__ = [
+    "LocalOptimizer",
+    "Optimizer",
+    "adaalter",
+    "adagrad",
+    "is_local",
+    "local_adaalter",
+    "local_sgd",
+    "make_optimizer",
+    "sgd",
+    "warmup_lr",
+]

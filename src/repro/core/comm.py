@@ -1,0 +1,66 @@
+"""Communication accounting for the paper's Figure-1/2 claims.
+
+Analytic per-step communication volume of each algorithm, plus the simple
+latency/bandwidth time model used by the throughput benchmarks (the paper's
+cluster is replaced by the TPU v5e constants from the roofline spec).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricModel:
+    """Bandwidths in bytes/s; latency in s per collective round."""
+    ici_bw: float = 50e9              # per-link ICI, v5e
+    dcn_bw: float = 6.25e9            # cross-pod, per chip
+    latency: float = 20e-6
+
+    def allreduce_time(self, bytes_per_replica: float, n: int,
+                       cross_pod: bool = False) -> float:
+        """Ring all-reduce: 2*(n-1)/n * bytes over the slowest link."""
+        if n <= 1:
+            return 0.0
+        bw = self.dcn_bw if cross_pod else self.ici_bw
+        return 2.0 * (n - 1) / n * bytes_per_replica / bw + self.latency
+
+
+def bytes_per_param(dtype_bytes: int = 4) -> int:
+    return dtype_bytes
+
+
+def sync_bytes_per_step(algorithm: str, n_params: int, H: int = 1,
+                        dtype_bytes: int = 4) -> float:
+    """Average per-step communication volume per worker (bytes).
+
+    AdaGrad/AdaAlter  : gradient all-reduce every step        -> P
+    Local SGD         : params every H steps                  -> P/H
+    Local AdaAlter    : params + accumulators every H steps   -> 2P/H
+                        (the paper's "2/H of fully synchronous" claim)
+    """
+    p = n_params * dtype_bytes
+    if algorithm in ("sgd", "adagrad", "adaalter"):
+        return float(p)
+    if algorithm == "local_sgd":
+        return p / H
+    if algorithm == "local_adaalter":
+        return 2.0 * p / H
+    raise ValueError(algorithm)
+
+
+def step_time(algorithm: str, n_params: int, compute_time: float, n_workers: int,
+              H: int = 1, fabric: FabricModel = FabricModel(),
+              cross_pod: bool = False, dtype_bytes: int = 4) -> float:
+    """Paper Fig.1 model: step wall time = compute + (amortized) comm."""
+    if algorithm in ("sgd", "adagrad", "adaalter"):
+        comm = fabric.allreduce_time(n_params * dtype_bytes, n_workers, cross_pod)
+    elif algorithm == "local_sgd":
+        comm = fabric.allreduce_time(n_params * dtype_bytes, n_workers, cross_pod) / H
+    elif algorithm == "local_adaalter":
+        comm = 2.0 * fabric.allreduce_time(n_params * dtype_bytes, n_workers,
+                                           cross_pod) / H
+    elif algorithm == "none":
+        comm = 0.0
+    else:
+        raise ValueError(algorithm)
+    return compute_time + comm

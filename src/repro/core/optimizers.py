@@ -1,0 +1,242 @@
+"""The paper's algorithms as composable JAX optimizer transformations.
+
+Algorithm 1  Distributed AdaGrad       -> :func:`adagrad`
+Algorithm 2  Local SGD                 -> :func:`local_sgd`
+Algorithm 3  Distributed AdaAlter      -> :func:`adaalter`
+Algorithm 4  Local AdaAlter            -> :func:`local_adaalter`
+
+Two-level API, mirroring the paper's structure:
+
+* ``Optimizer`` (init/update) — the *fully synchronous* methods (Alg. 1 and 3),
+  consuming the already-averaged gradient ``Ḡ_t`` (plus the averaged squared
+  gradient ``(1/n)Σ Gᵢ∘Gᵢ`` that Alg. 3 accumulates).
+* ``LocalOptimizer`` (init/local_step/sync) — the local methods (Alg. 2 and 4):
+  ``local_step`` is applied per worker with NO communication; ``sync``
+  averages parameters (and, for Local AdaAlter, the accumulated denominators)
+  across workers — the only communication rounds.
+
+All accumulators are fp32 regardless of parameter dtype.
+
+Key AdaAlter invariants (tested in tests/test_adaalter.py):
+  * the denominator used at local step t' after a sync is
+    ``B²_sync + t'·ε²`` — identical on every worker (lazy ε²-placeholder);
+  * AdaAlter updates params BEFORE folding G∘G into the accumulator;
+  * ``local_adaalter`` with H=1 is bit-identical to ``adaalter``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def _cast_like(x, ref):
+    return x.astype(ref.dtype) if x.dtype != ref.dtype else x
+
+
+def warmup_lr(base_lr: float, step, warmup_steps: int):
+    """Paper §6.2.1: eta_t = eta * min(1, t / warm_up_steps)."""
+    if warmup_steps <= 0:
+        return jnp.asarray(base_lr, jnp.float32)
+    t = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    return base_lr * jnp.minimum(1.0, t / warmup_steps)
+
+
+# --------------------------------------------------------------------------- #
+# fully synchronous optimizers (consume averaged gradients)
+# --------------------------------------------------------------------------- #
+class Optimizer(NamedTuple):
+    init: Callable[[Pytree], Pytree]
+    # update(grads, sq_grads, state, params) -> (new_params, new_state)
+    # sq_grads is (1/n)sum_i G_i∘G_i; pass grads**2 when n == 1.
+    update: Callable[..., Tuple[Pytree, Pytree]]
+
+
+def sgd(lr: float = 0.1, warmup_steps: int = 0) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, sq_grads, state, params):
+        step = state["step"] + 1
+        eta = warmup_lr(lr, step, warmup_steps)
+        new_params = jax.tree_util.tree_map(
+            lambda p, g: p - _cast_like(eta * g.astype(jnp.float32), p), params, grads)
+        return new_params, {"step": step}
+
+    return Optimizer(init, update)
+
+
+def adagrad(lr: float = 0.5, eps: float = 1.0, b0: float = 0.0,
+            warmup_steps: int = 0) -> Optimizer:
+    """Algorithm 1. B²_t += Ḡ_t∘Ḡ_t  (mean gradient, squared), THEN
+    x_t = x_{t-1} − η Ḡ_t/sqrt(B²_t + ε²·1).   B²_0 = b0²·1 (paper: 0)."""
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "b2": jax.tree_util.tree_map(
+                lambda p: jnp.full(p.shape, b0 * b0, jnp.float32), params),
+        }
+
+    def update(grads, sq_grads, state, params):
+        del sq_grads  # Alg. 1 accumulates the square of the MEAN gradient
+        step = state["step"] + 1
+        eta = warmup_lr(lr, step, warmup_steps)
+        b2 = jax.tree_util.tree_map(
+            lambda a, g: a + jnp.square(g.astype(jnp.float32)), state["b2"], grads)
+        new_params = jax.tree_util.tree_map(
+            lambda p, g, a: p - _cast_like(
+                eta * g.astype(jnp.float32) / jnp.sqrt(a + eps * eps), p),
+            params, grads, b2)
+        return new_params, {"step": step, "b2": b2}
+
+    return Optimizer(init, update)
+
+
+def adaalter(lr: float = 0.5, eps: float = 1.0, b0: float = 1.0,
+             warmup_steps: int = 0) -> Optimizer:
+    """Algorithm 3. x_t = x_{t-1} − η Ḡ_t/sqrt(B²_{t-1} + ε²·1), THEN
+    B²_t = B²_{t-1} + (1/n)Σᵢ Gᵢ,t∘Gᵢ,t.   B²_0 = b0²·1."""
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "b2": jax.tree_util.tree_map(
+                lambda p: jnp.full(p.shape, b0 * b0, jnp.float32), params),
+        }
+
+    def update(grads, sq_grads, state, params):
+        step = state["step"] + 1
+        eta = warmup_lr(lr, step, warmup_steps)
+        # update params with the PREVIOUS accumulator + the eps^2 placeholder
+        new_params = jax.tree_util.tree_map(
+            lambda p, g, a: p - _cast_like(
+                eta * g.astype(jnp.float32) / jnp.sqrt(a + eps * eps), p),
+            params, grads, state["b2"])
+        # then fold the (worker-averaged) squared gradients in
+        b2 = jax.tree_util.tree_map(
+            lambda a, s: a + s.astype(jnp.float32), state["b2"], sq_grads)
+        return new_params, {"step": step, "b2": b2}
+
+    return Optimizer(init, update)
+
+
+# --------------------------------------------------------------------------- #
+# local (communication-skipping) optimizers
+# --------------------------------------------------------------------------- #
+class LocalOptimizer(NamedTuple):
+    init: Callable[[Pytree], Pytree]
+    # local_step(grads, state, params) -> (new_params, new_state)   [no comm]
+    local_step: Callable[..., Tuple[Pytree, Pytree]]
+    # sync(params, state, mean_fn) -> (new_params, new_state)
+    #   mean_fn: pytree -> pytree averaging across workers; identity if n == 1.
+    sync: Callable[..., Tuple[Pytree, Pytree]]
+    H: int
+
+
+def _tree_mean_identity(tree):
+    return tree
+
+
+def local_sgd(lr: float = 0.1, H: int = 4, warmup_steps: int = 0) -> LocalOptimizer:
+    """Algorithm 2: plain local SGD, params averaged every H steps."""
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def local_step(grads, state, params):
+        step = state["step"] + 1
+        eta = warmup_lr(lr, step, warmup_steps)
+        new_params = jax.tree_util.tree_map(
+            lambda p, g: p - _cast_like(eta * g.astype(jnp.float32), p), params, grads)
+        return new_params, {"step": step}
+
+    def sync(params, state, mean_fn=_tree_mean_identity):
+        return mean_fn(params), state
+
+    return LocalOptimizer(init, local_step, sync, H)
+
+
+def local_adaalter(lr: float = 0.5, eps: float = 1.0, b0: float = 1.0,
+                   H: int = 4, warmup_steps: int = 0) -> LocalOptimizer:
+    """Algorithm 4 — the paper's main contribution.
+
+    State (per worker):
+      b2_sync  : B²_{i,t-t'} — denominator base, ONLY updated at sync rounds,
+                 hence identical on all workers at every local step.
+      b2_local : A²_{i,t} — running local accumulation B²+Σ G∘G (averaged at sync).
+      tprime   : number of local steps since the last sync (t' − 1 before the
+                 current step).
+      step     : global step count (for warm-up).
+
+    local_step (Alg. 4 lines 4-9):
+      t' = tprime + 1
+      y  = x − η_t · G / sqrt(b2_sync + t'·ε²·1)
+      b2_local += G∘G ;  tprime = t'
+
+    sync (Alg. 4 lines 11-12, after the H-th local_step):
+      x        <- mean_workers(x)
+      b2_local <- mean_workers(b2_local)
+      b2_sync  <- b2_local ;  tprime <- 0
+    """
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "tprime": jnp.zeros((), jnp.int32),
+            "b2_sync": jax.tree_util.tree_map(
+                lambda p: jnp.full(p.shape, b0 * b0, jnp.float32), params),
+            "b2_local": jax.tree_util.tree_map(
+                lambda p: jnp.full(p.shape, b0 * b0, jnp.float32), params),
+        }
+
+    def local_step(grads, state, params):
+        step = state["step"] + 1
+        tprime = state["tprime"] + 1
+        eta = warmup_lr(lr, step, warmup_steps)
+        denom_extra = tprime.astype(jnp.float32) * (eps * eps)
+        new_params = jax.tree_util.tree_map(
+            lambda p, g, a: p - _cast_like(
+                eta * g.astype(jnp.float32) / jnp.sqrt(a + denom_extra), p),
+            params, grads, state["b2_sync"])
+        b2_local = jax.tree_util.tree_map(
+            lambda a, g: a + jnp.square(g.astype(jnp.float32)),
+            state["b2_local"], grads)
+        return new_params, {"step": step, "tprime": tprime,
+                            "b2_sync": state["b2_sync"], "b2_local": b2_local}
+
+    def sync(params, state, mean_fn=_tree_mean_identity):
+        new_params = mean_fn(params)
+        b2 = mean_fn(state["b2_local"])
+        return new_params, {"step": state["step"],
+                            "tprime": jnp.zeros_like(state["tprime"]),
+                            "b2_sync": b2, "b2_local": b2}
+
+    return LocalOptimizer(init, local_step, sync, H)
+
+
+# --------------------------------------------------------------------------- #
+# factory
+# --------------------------------------------------------------------------- #
+def make_optimizer(cfg) -> Any:
+    """cfg: OptimizerConfig -> Optimizer | LocalOptimizer."""
+    if cfg.name == "sgd":
+        return sgd(cfg.lr, cfg.warmup_steps)
+    if cfg.name == "adagrad":
+        return adagrad(cfg.lr, cfg.eps, cfg.b0, cfg.warmup_steps)
+    if cfg.name == "adaalter":
+        return adaalter(cfg.lr, cfg.eps, cfg.b0, cfg.warmup_steps)
+    if cfg.name == "local_sgd":
+        return local_sgd(cfg.lr, cfg.H, cfg.warmup_steps)
+    if cfg.name == "local_adaalter":
+        return local_adaalter(cfg.lr, cfg.eps, cfg.b0, cfg.H, cfg.warmup_steps)
+    raise ValueError(f"unknown optimizer {cfg.name!r}")
+
+
+def is_local(opt) -> bool:
+    return isinstance(opt, LocalOptimizer)

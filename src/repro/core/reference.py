@@ -1,0 +1,81 @@
+"""Pure-NumPy line-by-line transcriptions of the paper's Algorithms 1-4.
+
+These deliberately follow the pseudocode *verbatim* (per-worker loops,
+explicit synchronization rounds) so tests can assert that the vectorized JAX
+implementations are faithful to the paper.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def warmup(lr, t, warmup_steps):
+    if warmup_steps <= 0:
+        return lr
+    return lr * min(1.0, t / warmup_steps)
+
+
+def ref_adagrad(x0, grads, lr, eps, b0=0.0, warmup_steps=0):
+    """Algorithm 1. grads: (T, n, d) per-iteration per-worker gradients."""
+    T, n, d = grads.shape
+    x = x0.astype(np.float64).copy()
+    b2 = np.full(d, b0 * b0, np.float64)
+    xs = []
+    for t in range(1, T + 1):
+        G = grads[t - 1].mean(axis=0)                 # line 5
+        b2 = b2 + G * G                               # line 6
+        x = x - warmup(lr, t, warmup_steps) * G / np.sqrt(b2 + eps * eps)  # line 7
+        xs.append(x.copy())
+    return np.asarray(xs), b2
+
+
+def ref_adaalter(x0, grads, lr, eps, b0=1.0, warmup_steps=0):
+    """Algorithm 3. grads: (T, n, d)."""
+    T, n, d = grads.shape
+    x = x0.astype(np.float64).copy()
+    b2 = np.full(d, b0 * b0, np.float64)
+    xs = []
+    for t in range(1, T + 1):
+        G = grads[t - 1].mean(axis=0)                                  # line 5
+        x = x - warmup(lr, t, warmup_steps) * G / np.sqrt(b2 + eps * eps)  # line 6
+        b2 = b2 + (grads[t - 1] ** 2).mean(axis=0)                     # line 7
+        xs.append(x.copy())
+    return np.asarray(xs), b2
+
+
+def ref_local_sgd(x0, grads, lr, H, warmup_steps=0):
+    """Algorithm 2. grads: (T, n, d); returns per-worker params (T, n, d)."""
+    T, n, d = grads.shape
+    x = np.tile(x0.astype(np.float64), (n, 1))
+    xs = []
+    for t in range(1, T + 1):
+        y = x - warmup(lr, t, warmup_steps) * grads[t - 1]             # line 5
+        if t % H != 0:
+            x = y                                                      # line 7
+        else:
+            x = np.tile(y.mean(axis=0), (n, 1))                        # line 9
+        xs.append(x.copy())
+    return np.asarray(xs)
+
+
+def ref_local_adaalter(x0, grads, lr, eps, H, b0=1.0, warmup_steps=0):
+    """Algorithm 4. grads: (T, n, d); returns (xs (T,n,d), b2 (n,d))."""
+    T, n, d = grads.shape
+    x = np.tile(x0.astype(np.float64), (n, 1))
+    b2 = np.full((n, d), b0 * b0, np.float64)       # B²_{i,·} (synced base)
+    a2 = b2.copy()                                  # A²_{i,·} running local accum
+    last_sync_b2 = b2.copy()                        # B²_{i,t-t'}
+    xs = []
+    for t in range(1, T + 1):
+        tp = (t - 1) % H + 1                                            # line 4
+        eta = warmup(lr, t, warmup_steps)
+        y = x - eta * grads[t - 1] / np.sqrt(last_sync_b2 + tp * eps * eps)  # line 6
+        a2 = b2 + grads[t - 1] ** 2                                     # line 7
+        if t % H != 0:
+            x, b2 = y, a2                                               # line 9
+        else:
+            x = np.tile(y.mean(axis=0), (n, 1))                         # line 11
+            b2 = np.tile(a2.mean(axis=0), (n, 1))                       # line 12
+            last_sync_b2 = b2.copy()
+        xs.append(x.copy())
+    return np.asarray(xs), b2

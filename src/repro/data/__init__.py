@@ -1,0 +1,4 @@
+"""Data pipeline: deterministic synthetic non-IID LM streams (see synthetic.py)."""
+from repro.data.synthetic import SyntheticLM, make_train_batch
+
+__all__ = ["SyntheticLM", "make_train_batch"]

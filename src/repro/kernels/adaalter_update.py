@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: fused (Local) AdaAlter parameter update.
+
+One pass over HBM per optimizer step: reads (x, g, b2_sync, b2_local),
+writes (y, new_b2_local) — the paper's line-6/7 pair
+
+    y           = x − η · g / sqrt(b2_sync + t'·ε²·1)
+    b2_local    = b2_local + g∘g
+
+fused into a single VMEM-tiled elementwise kernel. The optimizer update is
+the hot loop the paper's wall-time tables hinge on (it runs once per local
+step over EVERY parameter), and the fusion eliminates the intermediate
+normalized-gradient and denominator round-trips to HBM: 4 reads + 2 writes
+instead of the 7 reads + 3 writes of the unfused lowering.
+
+Layout: arbitrary parameter leaves are flattened, padded to a multiple of
+(BLOCK_ROWS*128) and viewed as (rows, 128) — the native VPU lane width —
+with a 1-D grid over row blocks. Scalars (η, t'·ε²) ride in SMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+BLOCK_ROWS = 512          # (512, 128) fp32 tile = 256 KiB/operand in VMEM
+
+
+def _kernel(scalars_ref, x_ref, g_ref, bs_ref, bl_ref, y_ref, blo_ref):
+    eta = scalars_ref[0]
+    extra = scalars_ref[1]                       # t' * eps^2   (AdaAlter: eps^2)
+    g = g_ref[...].astype(jnp.float32)
+    denom = jax.lax.rsqrt(bs_ref[...] + extra)
+    x = x_ref[...].astype(jnp.float32)
+    y_ref[...] = (x - eta * g * denom).astype(y_ref.dtype)
+    blo_ref[...] = bl_ref[...] + g * g
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fused_update_2d(x, g, b2_sync, b2_local, eta, extra, *,
+                    block_rows: int = BLOCK_ROWS, interpret: bool = False):
+    """Core pallas_call on a (rows, 128) view. b2_* must be float32."""
+    rows = x.shape[0]
+    assert x.shape[1] == LANES and rows % block_rows == 0, x.shape
+    scalars = jnp.stack([jnp.asarray(eta, jnp.float32),
+                         jnp.asarray(extra, jnp.float32)])
+    grid = (rows // block_rows,)
+    tile = (block_rows, LANES)
+    bspec = pl.BlockSpec(tile, lambda i: (i, 0))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            bspec, bspec, bspec, bspec,
+        ],
+        out_specs=[bspec, bspec],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct(b2_local.shape, jnp.float32),
+        ],
+        interpret=interpret,
+    )(scalars, x, g, b2_sync, b2_local)
+
+
+def _to_2d(a, block_rows):
+    flat = a.reshape(-1)
+    chunk = block_rows * LANES
+    pad = (-flat.size) % chunk
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, LANES), pad
+
+
+def fused_update(x, g, b2_sync, b2_local, eta, extra, *,
+                 block_rows: int = BLOCK_ROWS, interpret: bool = False):
+    """Fused update on an arbitrarily-shaped leaf. Returns (y, new_b2_local)."""
+    shape, size = x.shape, x.size
+    x2, _ = _to_2d(x, block_rows)
+    g2, _ = _to_2d(g, block_rows)
+    bs2, _ = _to_2d(b2_sync.astype(jnp.float32), block_rows)
+    bl2, _ = _to_2d(b2_local.astype(jnp.float32), block_rows)
+    y2, blo2 = fused_update_2d(x2, g2, bs2, bl2, eta, extra,
+                               block_rows=block_rows, interpret=interpret)
+    y = y2.reshape(-1)[:size].reshape(shape)
+    blo = blo2.reshape(-1)[:size].reshape(shape)
+    return y, blo

@@ -1,0 +1,43 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``tree_fused_update`` applies the fused (Local) AdaAlter update across a
+whole parameter pytree. On CPU (this container) the kernels run in
+``interpret=True`` mode; on TPU the same code path compiles the Mosaic
+kernel. ``use_pallas=False`` falls back to the pure-jnp oracle, which is
+what the unfused production path uses anyway — the two are allclose-tested
+against each other in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.adaalter_update import fused_update
+from repro.kernels.ref import fused_update_ref
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def leaf_fused_update(x, g, b2_sync, b2_local, eta, extra, *,
+                      use_pallas: bool = True):
+    if not use_pallas:
+        return fused_update_ref(x, g, b2_sync, b2_local, eta, extra)
+    return fused_update(x, g, b2_sync, b2_local, eta, extra,
+                        interpret=not on_tpu())
+
+
+def tree_fused_update(params, grads, b2_sync, b2_local, eta, extra, *,
+                      use_pallas: bool = True):
+    """Apply the fused update leaf-wise. Returns (new_params, new_b2_local)."""
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_bs = treedef.flatten_up_to(b2_sync)
+    flat_bl = treedef.flatten_up_to(b2_local)
+    ys, bls = [], []
+    for p, g, bs, bl in zip(flat_p, flat_g, flat_bs, flat_bl):
+        y, nbl = leaf_fused_update(p, g, bs, bl, eta, extra,
+                                   use_pallas=use_pallas)
+        ys.append(y)
+        bls.append(nbl)
+    return treedef.unflatten(ys), treedef.unflatten(bls)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the fused AdaAlter update kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_update_ref(x, g, b2_sync, b2_local, eta, extra):
+    """y = x − η·g/sqrt(b2_sync + extra);  b2_local += g²  (all math fp32)."""
+    g32 = g.astype(jnp.float32)
+    denom = jnp.sqrt(b2_sync.astype(jnp.float32) + jnp.asarray(extra, jnp.float32))
+    y = (x.astype(jnp.float32)
+         - jnp.asarray(eta, jnp.float32) * g32 / denom).astype(x.dtype)
+    new_b2 = b2_local.astype(jnp.float32) + g32 * g32
+    return y, new_b2
+
+
+def ssd_ref(xbar, Bm, Cm, dA):
+    """Pure-jnp oracle for the SSD chunk scan (mirrors models/ssm.py math).
+
+    xbar: (B,NZ,c,NH,hd)  Bm/Cm: (B,NZ,c,N)  dA: (B,NZ,c,NH) -> y fp32.
+    """
+    import jax
+    b, nz, c, nh, hd = xbar.shape
+    xbar = xbar.astype(jnp.float32)
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+    cum = jnp.cumsum(dA.astype(jnp.float32), axis=2)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    CB = jnp.einsum("bzln,bzsn->bzls", Cm, Bm)
+    logdecay = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    logdecay = jnp.where(tri[None, None, :, :, None], logdecay, -jnp.inf)
+    M = CB[..., None] * jnp.exp(logdecay)
+    y = jnp.einsum("bzlsh,bzshp->bzlhp", M, xbar)
+    seg = jnp.exp(cum[:, :, -1:, :] - cum)
+    chunk_states = jnp.einsum("bzsn,bzsh,bzshp->bzhnp", Bm, seg, xbar)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])
+
+    def scan_fn(S, inp):
+        st, dk = inp
+        return S * dk[..., None, None] + st, S
+
+    S0 = jnp.zeros((b, nh, Bm.shape[-1], hd), jnp.float32)
+    _, S_before = jax.lax.scan(
+        scan_fn, S0,
+        (chunk_states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    S_before = S_before.transpose(1, 0, 2, 3, 4)
+    return y + jnp.einsum("bzln,bzlh,bzhnp->bzlhp", Cm, jnp.exp(cum), S_before)

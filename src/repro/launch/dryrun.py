@@ -1,0 +1,187 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first initialization, and the production dry-run needs 512
+# placeholder host devices to build the 16x16 (single-pod) and 2x16x16
+# (multi-pod) meshes. Everything else (tests, benches) sees 1 device.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combination.
+
+For each pair this proves the sharding config is coherent (no GSPMD
+mismatch, no unsupported collective) and extracts the roofline inputs:
+``compiled.memory_analysis()`` (fits-in-HBM proof) and
+``compiled.cost_analysis()`` + HLO collective bytes (§Roofline terms).
+
+  train_4k    lowers train_step (both the local/comm-free variant and the
+              H-th sync variant when the optimizer is local);
+  prefill_32k lowers serve prefill;
+  decode_32k / long_500k lower serve_step: ONE token against the KV cache.
+
+Usage:
+  python -m repro.launch.dryrun --arch all --shape all --mesh single \
+      --out experiments/dryrun
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --mesh multi
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.configs import ARCHS, ASSIGNED, SHAPES, OptimizerConfig, get_arch, get_shape
+from repro.launch.mesh import make_production_mesh, resolve_plan
+from repro.launch.serving import (build_serve_programs, decode_cache_specs,
+                                  serve_batch_specs, serve_plan)
+from repro.launch.steps import build_train_programs, train_batch_specs
+from repro.roofline import analyze, model_flops
+
+
+def _mesh_name(mesh) -> str:
+    return "x".join(str(mesh.shape[a]) for a in mesh.shape)
+
+
+def _abstract(tree):
+    """Strip shardings: plain ShapeDtypeStructs for .lower()."""
+    return jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+OPT_FLAGS = dict(attn_tp_pad=True, attn_remat=True, fused_xent=True,
+                 moe_group_tokens=True, seq_parallel=True)
+# expert_axes_2d: REFUTED (§Perf llama4 iter 2): GSPMD gathers the global
+# token table instead of all-to-all -> collective 31s -> 67s.
+# attn_bf16_probs: REFUTED under CPU f32-promoted lowering (§Perf qwen iter 5)
+
+
+def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool,
+                opt_name: str = "local_adaalter", H: int = 4,
+                verbose: bool = True, optimized: bool = False) -> Dict[str, Any]:
+    """Lower+compile one (arch, shape, mesh); return the roofline record(s)."""
+    cfg = get_arch(arch)
+    if optimized:
+        cfg = dataclasses.replace(cfg, **OPT_FLAGS)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = _mesh_name(mesh)
+    n_chips = mesh.size
+    t0 = time.time()
+    records = []
+
+    if shape.kind == "train":
+        opt_cfg = OptimizerConfig(name=opt_name, H=H)
+        plan = resolve_plan(cfg, mesh, optimizer=opt_name)
+        # remat="save_tp" was tried and REFUTED on qwen2-7b (§Perf iter 3):
+        # -1.0s collective, +6.9s memory. But remat="full" for small
+        # memory-bound models (mamba2: stacked f32 residuals x48 layers
+        # dominate) trades negligible FLOPs for the stacked saves:
+        if optimized and plan.remat == "none":
+            plan = dataclasses.replace(plan, remat="full")
+        with mesh:
+            programs = build_train_programs(cfg, shape, opt_cfg, mesh, plan)
+            abstract = jax.eval_shape(programs.init_fn, jax.random.PRNGKey(0))
+            params, opt_state = _abstract(abstract[0]), _abstract(abstract[1])
+            batch = train_batch_specs(
+                cfg, shape, programs.n_workers if programs.is_local else 0)
+            variants = [("local_step", programs.local_step)]
+            if programs.is_local:
+                variants.append(("sync_step", programs.sync_step))
+            for vname, fn in variants:
+                lowered = fn.lower(params, opt_state, batch)
+                compiled = lowered.compile()
+                rep = analyze(compiled, arch=arch, shape_name=shape_name,
+                              mesh_name=mesh_name, n_chips=n_chips,
+                              model_flops_total=model_flops(cfg, shape))
+                rec = rep.to_dict()
+                rec.update(variant=vname, plan=dataclasses.asdict(plan),
+                           n_workers=programs.n_workers, H=programs.H,
+                           optimizer=opt_name,
+                           memory_analysis=str(compiled.memory_analysis()),
+                           compile_s=round(time.time() - t0, 1))
+                records.append(rec)
+                if verbose:
+                    print(f"  [{vname}] {rep.summary()}")
+                    print(f"  [{vname}] mem: {compiled.memory_analysis()}")
+    else:
+        plan = serve_plan(cfg, mesh)
+        with mesh:
+            programs = build_serve_programs(cfg, shape, mesh, plan)
+            specs = serve_batch_specs(cfg, shape)
+            abstract_params = jax.eval_shape(
+                programs.init_fn, jax.random.PRNGKey(0))
+            params = _abstract(abstract_params)
+            if shape.kind == "prefill":
+                lowered = programs.prefill.lower(params, specs["prefill"])
+                vname = "prefill"
+            else:
+                caches = _abstract(decode_cache_specs(cfg, shape))
+                lowered = programs.decode_step.lower(
+                    params, caches, specs["token"], specs["pos"])
+                vname = "decode_step"
+            compiled = lowered.compile()
+            rep = analyze(compiled, arch=arch, shape_name=shape_name,
+                          mesh_name=mesh_name, n_chips=n_chips,
+                          model_flops_total=model_flops(cfg, shape))
+            rec = rep.to_dict()
+            rec.update(variant=vname, plan=dataclasses.asdict(plan),
+                       cache_len=programs.cache_len, window=programs.window,
+                       memory_analysis=str(compiled.memory_analysis()),
+                       compile_s=round(time.time() - t0, 1))
+            records.append(rec)
+            if verbose:
+                print(f"  [{vname}] {rep.summary()}")
+                print(f"  [{vname}] mem: {compiled.memory_analysis()}")
+
+    return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "records": records, "elapsed_s": round(time.time() - t0, 1)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help=f"architecture id, 'all', or 'assigned' ({sorted(ARCHS)})")
+    ap.add_argument("--shape", default="all", help=f"one of {sorted(SHAPES)} or 'all'")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--optimizer", default="local_adaalter")
+    ap.add_argument("--H", type=int, default=4)
+    ap.add_argument("--out", default="", help="directory for per-pair JSON records")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the beyond-paper perf flags (§Perf '+opt')")
+    args = ap.parse_args()
+
+    archs = (ASSIGNED if args.arch == "assigned"
+             else sorted(ARCHS) if args.arch == "all" else [args.arch])
+    shapes = sorted(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_ok = n_fail = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi_pod in meshes:
+                tag = f"{arch} x {shape_name} x {'2x16x16' if multi_pod else '16x16'}"
+                print(f"== {tag}", flush=True)
+                try:
+                    result = dryrun_pair(arch, shape_name, multi_pod=multi_pod,
+                                         opt_name=args.optimizer, H=args.H,
+                                         optimized=args.optimized)
+                    n_ok += 1
+                    if args.out:
+                        os.makedirs(args.out, exist_ok=True)
+                        fn = (f"{arch}_{shape_name}_"
+                              f"{'multi' if multi_pod else 'single'}"
+                              f"{'_opt' if args.optimized else ''}.json")
+                        with open(os.path.join(args.out, fn), "w") as f:
+                            json.dump(result, f, indent=1)
+                    print(f"   OK in {result['elapsed_s']}s", flush=True)
+                except Exception:
+                    n_fail += 1
+                    print(f"   FAIL: {tag}\n{traceback.format_exc()}", flush=True)
+    print(f"\ndry-run complete: {n_ok} ok, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Production meshes and per-arch parallelism-plan resolution.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — required because the
+dry-run must set XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.configs.base import ModelConfig, ParallelismPlan
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
+    """Small mesh for CPU multi-device tests (host platform device count)."""
+    return jax.make_mesh(shape, axes)
+
+
+# Parameter-count thresholds steering worker granularity (see DESIGN.md §2/§4)
+_POD_WORKER_THRESHOLD = 20e9       # > 20B params: one local-SGD worker per pod
+_SYNC_ONLY_THRESHOLD = 100e9       # > 100B: no local workers (AdaAlter, global FSDP)
+
+
+def resolve_plan(cfg: ModelConfig, mesh, *, optimizer: str = "local_adaalter",
+                 override: Optional[ParallelismPlan] = None) -> ParallelismPlan:
+    """Choose local-SGD worker granularity from model size and mesh topology."""
+    if override is not None:
+        return override
+    axes = set(mesh.shape.keys())
+    has_pod = "pod" in axes
+    n_params = cfg.param_count()
+    local = optimizer in ("local_adaalter", "local_sgd")
+
+    if n_params > _SYNC_ONLY_THRESHOLD or not local:
+        # fully synchronous (AdaAlter/AdaGrad): all non-model axes do
+        # data-parallel FSDP; the paper's "local" part is disabled.
+        dp = tuple(a for a in ("pod", "data") if a in axes)
+        return ParallelismPlan(local_axes=(), grad_axes=dp, fsdp_axes=dp,
+                               remat="full" if n_params > 1e9 else "none",
+                               weight_gather_serving=n_params > _POD_WORKER_THRESHOLD)
+    if n_params > _POD_WORKER_THRESHOLD:
+        # workers = pods; within a pod every-step sync + ZeRO over "data"
+        return ParallelismPlan(
+            local_axes=("pod",) if has_pod else (),
+            grad_axes=("data",),
+            fsdp_axes=("data",),
+            remat="full",
+            weight_gather_serving=True,
+        )
+    # paper-style many workers: every (pod, data) slice is a worker
+    return ParallelismPlan(
+        local_axes=("pod", "data") if has_pod else ("data",),
+        grad_axes=(),
+        fsdp_axes=(),
+        remat="full" if n_params > 1e9 else "none",
+    )

@@ -1,0 +1,196 @@
+"""Serving programs: batched prefill + single-token decode with a KV cache.
+
+Shape semantics (assignment):
+  * ``prefill_32k``  lowers ``prefill``  — full forward over S tokens,
+    returning last-position logits + primed caches.
+  * ``decode_32k`` / ``long_500k`` lower ``decode_step`` — ONE new token
+    against a pre-allocated cache of ``cache_len`` entries.
+
+Distribution: no local-SGD worker axis in serving. The request batch is
+sharded over every non-model mesh axis; tensor parallelism over ``model``.
+The KV cache shards its *sequence* dimension over ``model`` — with GQA
+(kv_heads=8 < 16-way TP) the head dimension cannot absorb the model axis, and
+a 32k×128-batch bf16 cache replicated per TP group would not fit v5e HBM.
+Sequence-sharding the cache is the TPU-idiomatic choice: the one-hot ring
+write is elementwise in the sharded dim, and GSPMD turns the softmax
+normalization into a cheap per-step all-reduce over ``model``.
+
+``long_500k`` requires sub-quadratic state: SSM/hybrid archs decode from O(1)
+recurrent state natively; dense/MoE/VLM/audio archs use the sliding-window
+cache variant (``cfg.long_context_mode == 'sliding_window'``, ring buffer of
+``cfg.sliding_window`` slots) — an explicit, honest substitution recorded in
+DESIGN.md and EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelismPlan, ShapeConfig
+from repro.models import build_model
+from repro.sharding.partition import ShardingRules, use_rules
+from repro.sharding.specs import param_shardings, shape_safe_spec
+
+DEFAULT_LONG_WINDOW = 8192
+
+
+def serve_plan(cfg: ModelConfig, mesh) -> ParallelismPlan:
+    """Serving parallelism: batch over all non-model axes, FSDP big weights."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    big = cfg.param_count() > 20e9
+    return ParallelismPlan(
+        local_axes=(), grad_axes=dp, fsdp_axes=dp if big else (),
+        weight_gather_serving=big, remat="none")
+
+
+def cache_geometry(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[int, int, int]:
+    """-> (cache_len, window, cross_len) for a decode shape."""
+    window = 0
+    cache_len = shape.seq_len
+    if shape.seq_len > 65536:
+        # long-context decode: bounded state required (assignment). SSM archs
+        # are O(1) natively; others fall back to their sliding-window variant.
+        if cfg.family not in ("ssm",):
+            window = cfg.sliding_window or DEFAULT_LONG_WINDOW
+            cache_len = window
+    elif cfg.sliding_window and cfg.long_context_mode != "sliding_window":
+        # architectural SWA (e.g. hymba): windowed at every context length
+        window = cfg.sliding_window
+        cache_len = min(cache_len, window)
+    if cfg.family == "ssm":
+        cache_len = 0                     # no attention cache at all
+    cross_len = 0
+    if cfg.cross_attn_every:
+        cross_len = cfg.n_image_tokens
+    if cfg.is_encdec:
+        cross_len = min(shape.seq_len, 32768)   # encoder output length
+    return cache_len, window, cross_len
+
+
+# --------------------------------------------------------------------------- #
+# cache shardings
+# --------------------------------------------------------------------------- #
+def cache_shardings(rules: ShardingRules, cache_abstract, family: str):
+    mesh = rules.mesh
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    b_entry = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    if family == "lstm":
+        def one(leaf):                                   # (B, H)
+            spec = P(b_entry, *([None] * (leaf.ndim - 1)))
+            return NamedSharding(mesh, shape_safe_spec(leaf.shape, spec, mesh))
+        return jax.tree_util.tree_map(one, cache_abstract)
+
+    def one(path, leaf):
+        names = [str(getattr(p, "key", "")) for p in path]
+        name = next((n for n in reversed(names) if n), "")
+        nd = leaf.ndim
+        if name in ("kv", "xkv") and nd == 5:            # (g,B,L,kv,hd)
+            spec = P(None, b_entry, "model", None, None)
+        elif name == "ssm" and nd == 5:                  # (g,B,nh,N,hd)
+            spec = P(None, b_entry, "model", None, None)
+        elif name == "ssm" and nd == 4:                  # conv tail (g,B,W-1,C)
+            spec = P(None, b_entry, None, "model")
+        else:
+            spec = P(*([None] * nd)) if nd < 2 else P(None, b_entry,
+                                                      *([None] * (nd - 2)))
+        return NamedSharding(mesh, shape_safe_spec(leaf.shape, spec, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, cache_abstract)
+
+
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class ServePrograms:
+    init_fn: Any                  # (rng) -> params
+    prefill: Any                  # (params, batch) -> (logits, caches)
+    decode_step: Any              # (params, caches, token, pos) -> (logits, caches)
+    param_sharding: Any
+    cache_sharding: Any
+    cache_len: int
+    window: int
+    cross_len: int
+
+
+def build_serve_programs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                         plan: ParallelismPlan = None) -> ServePrograms:
+    model = build_model(cfg)
+    plan = plan or serve_plan(cfg, mesh)
+    rules = ShardingRules(mesh, plan)
+    cache_len, window, cross_len = cache_geometry(cfg, shape)
+    B = shape.global_batch
+
+    abstract_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_sh = param_shardings(rules, abstract_params, with_workers=False)
+    init_fn = jax.jit(model.init, out_shardings=p_sh)
+
+    cache_abstract = jax.eval_shape(
+        lambda: model.init_cache(B, max(cache_len, 1), windowed=bool(window),
+                                 cross_len=cross_len))
+    c_sh = cache_shardings(rules, cache_abstract, cfg.family)
+
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    b_entry = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def _b_shard(shape_tuple):
+        return NamedSharding(mesh, shape_safe_spec(
+            shape_tuple, P(b_entry, *([None] * (len(shape_tuple) - 1))), mesh))
+
+    def prefill_fn(params, batch):
+        with use_rules(rules):
+            return model.prefill(params, batch, window=window)
+
+    def decode_fn(params, caches, token, pos):
+        with use_rules(rules):
+            return model.decode_step(params, caches, token, pos, window=window)
+
+    batch_spec = serve_batch_specs(cfg, shape)
+    prefill_b_sh = jax.tree_util.tree_map(lambda l: _b_shard(l.shape),
+                                          batch_spec["prefill"])
+    prefill_jit = jax.jit(prefill_fn,
+                          in_shardings=(p_sh, prefill_b_sh),
+                          out_shardings=(None, c_sh))
+    decode_jit = jax.jit(decode_fn,
+                         in_shardings=(p_sh, c_sh,
+                                       _b_shard((B, 1)), _b_shard((B,))),
+                         out_shardings=(None, c_sh),
+                         donate_argnums=(1,))
+    return ServePrograms(init_fn=init_fn, prefill=prefill_jit,
+                         decode_step=decode_jit, param_sharding=p_sh,
+                         cache_sharding=c_sh, cache_len=cache_len,
+                         window=window, cross_len=cross_len)
+
+
+# --------------------------------------------------------------------------- #
+# abstract input specs (dry-run: never allocated)
+# --------------------------------------------------------------------------- #
+def serve_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStructs for prefill batch and decode-step inputs."""
+    B, S = shape.global_batch, shape.seq_len
+    dtype = jnp.dtype(cfg.param_dtype)
+    prefill_batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.cross_attn_every:
+        prefill_batch["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_image_tokens, cfg.d_model), dtype)
+    if cfg.is_encdec:
+        prefill_batch["audio_frames"] = jax.ShapeDtypeStruct(
+            (B, min(S, 32768), cfg.d_model), dtype)
+    return {
+        "prefill": prefill_batch,
+        "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+    }
+
+
+def decode_cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Abstract cache pytree for the decode dry-run (no allocation)."""
+    model = build_model(cfg)
+    cache_len, window, cross_len = cache_geometry(cfg, shape)
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, max(cache_len, 1),
+                                 windowed=bool(window), cross_len=cross_len))

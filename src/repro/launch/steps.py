@@ -1,0 +1,209 @@
+"""Distributed train/serve step builders (pjit + vmap-over-workers).
+
+Training with a *local* optimizer (the paper's Algorithms 2/4):
+  * every trainable array and accumulator carries a leading worker axis R,
+    physically sharded over ``plan.local_axes`` — per-device memory equals
+    plain data parallelism, but replicas may diverge between syncs;
+  * ``train_step(..., do_sync=False)`` — H-1 out of H steps — contains NO
+    collective over the worker axes (the paper's skipped rounds);
+  * ``train_step(..., do_sync=True)`` adds the params+accumulator average
+    (Alg. 4 lines 11-12), which GSPMD lowers to the 2·P all-reduce the paper
+    charges 2/H per step for.
+  The two variants are compiled separately (static ``do_sync``) so the
+  dry-run can attribute collective bytes to each and report the amortized
+  ``local + sync/H`` volume exactly.
+
+Training with a synchronous optimizer (Alg. 1/3, or models too large for
+per-worker replicas): classic data-parallel/FSDP — gradients are implicitly
+all-reduced every step by GSPMD.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, OptimizerConfig, ParallelismPlan, ShapeConfig
+from repro.core import optimizers as opt_lib
+from repro.models import build_model
+from repro.sharding.partition import ShardingRules, use_rules
+from repro.sharding.specs import param_shardings, opt_state_shardings, shape_safe_spec
+
+
+def _axes_entry(axes: Tuple[str, ...]):
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def worker_count(plan: ParallelismPlan, mesh) -> int:
+    n = 1
+    for ax in plan.local_axes:
+        n *= mesh.shape[ax]
+    return n
+
+
+def _batch_sharding(rules: ShardingRules, batch_tree, *, workers: bool):
+    mesh, plan = rules.mesh, rules.plan
+    w = _axes_entry(tuple(plan.local_axes))
+    d = _axes_entry(tuple(plan.grad_axes))
+
+    def one(leaf):
+        if workers:
+            spec = P(w, d, *([None] * (leaf.ndim - 2)))
+        else:
+            spec = P(d, *([None] * (leaf.ndim - 1)))
+        return NamedSharding(mesh, shape_safe_spec(leaf.shape, spec, mesh))
+
+    return jax.tree_util.tree_map(one, batch_tree)
+
+
+def _mean_over_workers(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(jnp.mean(x, axis=0, keepdims=True), x.shape),
+        tree)
+
+
+@dataclasses.dataclass
+class TrainPrograms:
+    """Jitted step functions + their input sharding pytrees."""
+    init_fn: Any                 # (rng) -> (params, opt_state)
+    local_step: Any              # (params, opt_state, batch) -> (params, opt_state, metrics)
+    sync_step: Any               # same signature; includes the H-th-step averaging
+    batch_sharding: Any
+    param_sharding: Any
+    opt_sharding: Any
+    n_workers: int
+    is_local: bool
+    H: int
+
+
+def build_train_programs(cfg: ModelConfig, shape: ShapeConfig,
+                         opt_cfg: OptimizerConfig, mesh,
+                         plan: ParallelismPlan) -> TrainPrograms:
+    model = build_model(cfg)
+    opt = opt_lib.make_optimizer(opt_cfg)
+    local = opt_lib.is_local(opt) and bool(plan.local_axes)
+    overrides = {}
+    if getattr(cfg, "seq_parallel", False):
+        overrides["seq_sp"] = "model"
+    if getattr(cfg, "expert_axes_2d", False):
+        overrides["experts"] = ("model", "data")
+    rules = ShardingRules(mesh, plan, overrides or None)
+    R = worker_count(plan, mesh) if local else 1
+    spmd_axes = tuple(plan.local_axes)
+
+    # ---------------- abstract init (for shardings) ---------------------- #
+    def raw_init(rng):
+        params = model.init(rng)
+        if local:
+            params = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[None], (R,) + x.shape), params)
+            state = jax.vmap(opt.init if opt_lib.is_local(opt) else opt.init)(params)
+        else:
+            state = opt.init(params)
+        return params, state
+
+    with use_rules(rules):
+        abstract = jax.eval_shape(raw_init, jax.random.PRNGKey(0))
+    p_sh = param_shardings(rules, abstract[0], with_workers=local)
+    s_sh = opt_state_shardings(rules, abstract[1], p_sh, with_workers=local)
+
+    init_fn = jax.jit(raw_init, out_shardings=(p_sh, s_sh))
+
+    # ---------------- loss/grad ------------------------------------------ #
+    def loss_fn(params, batch):
+        with use_rules(rules):
+            loss, metrics = model.loss_fn(params, batch, remat=plan.remat)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    # ---------------- step bodies ---------------------------------------- #
+    if local:
+        def _worker(params, batch):
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+
+        vworker = jax.vmap(_worker, spmd_axis_name=spmd_axes or None)
+        vlocal = jax.vmap(opt.local_step)
+
+        def step(params, opt_state, batch, *, do_sync: bool):
+            loss, metrics, grads = vworker(params, batch)
+            if opt_cfg.use_pallas and opt_cfg.name == "local_adaalter":
+                from repro.kernels.ops import tree_fused_update
+                step_no = opt_state["step"] + 1
+                tprime = opt_state["tprime"] + 1
+                eta = opt_lib.warmup_lr(opt_cfg.lr, step_no[0], opt_cfg.warmup_steps)
+                extra = tprime[0].astype(jnp.float32) * opt_cfg.eps ** 2
+                new_params, new_b2 = tree_fused_update(
+                    params, grads, opt_state["b2_sync"], opt_state["b2_local"],
+                    eta, extra, use_pallas=True)
+                new_state = {"step": step_no, "tprime": tprime,
+                             "b2_sync": opt_state["b2_sync"], "b2_local": new_b2}
+            else:
+                new_params, new_state = vlocal(grads, opt_state, params)
+            if do_sync:
+                new_params, new_state = opt.sync(new_params, new_state,
+                                                 _mean_over_workers)
+            out_metrics = {"loss": jnp.mean(loss),
+                           **{k: jnp.mean(v) for k, v in metrics.items()}}
+            return new_params, new_state, out_metrics
+    else:
+        def step(params, opt_state, batch, *, do_sync: bool):
+            (loss, metrics), grads = grad_fn(params, batch)
+            sq = jax.tree_util.tree_map(lambda g: jnp.square(g.astype(jnp.float32)),
+                                        grads)
+            if isinstance(opt, opt_lib.LocalOptimizer):
+                new_params, new_state = opt.local_step(grads, opt_state, params)
+                if do_sync:
+                    new_params, new_state = opt.sync(new_params, new_state)
+            else:
+                new_params, new_state = opt.update(grads, sq, opt_state, params)
+            out_metrics = {"loss": loss,
+                           **{k: jnp.mean(v) for k, v in metrics.items()}}
+            return new_params, new_state, out_metrics
+
+    # ---------------- batch specs + jit ----------------------------------- #
+    example_batch = train_batch_specs(cfg, shape, R if local else 0)
+    b_sh = _batch_sharding(rules, example_batch, workers=local)
+
+    common = dict(
+        in_shardings=(p_sh, s_sh, b_sh),
+        out_shardings=(p_sh, s_sh, None),
+        donate_argnums=(0, 1),
+    )
+    local_step = jax.jit(partial(step, do_sync=False), **common)
+    sync_step = jax.jit(partial(step, do_sync=True), **common)
+
+    return TrainPrograms(
+        init_fn=init_fn, local_step=local_step, sync_step=sync_step,
+        batch_sharding=b_sh, param_sharding=p_sh, opt_sharding=s_sh,
+        n_workers=R, is_local=local,
+        H=getattr(opt, "H", 1) if opt_lib.is_local(opt) else 1)
+
+
+# --------------------------------------------------------------------------- #
+# abstract input specs (ShapeDtypeStructs — never allocated)
+# --------------------------------------------------------------------------- #
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig, n_workers: int = 0):
+    """n_workers > 0 -> leading worker axis with per-worker batch slices."""
+    S = shape.seq_len
+    if n_workers:
+        assert shape.global_batch % n_workers == 0, (shape, n_workers)
+        lead = (n_workers, shape.global_batch // n_workers)
+    else:
+        lead = (shape.global_batch,)
+    toks = jax.ShapeDtypeStruct(lead + (S,), jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.cross_attn_every:
+        batch["image_embeds"] = jax.ShapeDtypeStruct(
+            lead + (cfg.n_image_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.is_encdec:
+        batch["audio_frames"] = jax.ShapeDtypeStruct(
+            lead + (S, cfg.d_model), jnp.bfloat16)
+    return batch

@@ -1,0 +1,148 @@
+"""End-to-end training driver (CPU-runnable, mesh-agnostic).
+
+Trains any architecture config (typically a ``--reduced`` variant on CPU)
+with any of the paper's optimizers on the synthetic non-IID LM stream,
+logging loss/PPL and the communication volume each algorithm would move.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --reduced \
+      --optimizer local_adaalter --H 4 --steps 200 --batch 16 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import (ARCHS, OptimizerConfig, ShapeConfig, get_arch,
+                           get_shape, reduced)
+from repro.configs.base import ModelConfig, ParallelismPlan, TrainConfig
+from repro.core.comm import sync_bytes_per_step
+from repro.data import SyntheticLM, make_train_batch
+from repro.launch.mesh import resolve_plan
+from repro.launch.steps import build_train_programs
+from repro.models.counting import count_params
+
+
+def make_cpu_mesh(n_workers: int = 1):
+    """Mesh over however many (host) devices exist: (data, model)."""
+    n = jax.device_count()
+    model = 1
+    data = n
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+@dataclasses.dataclass
+class TrainResult:
+    losses: List[float]
+    ppl: List[float]
+    steps: int
+    n_workers: int
+    comm_bytes_per_step: float
+    wall_s: float
+    final_loss: float
+
+
+def train_loop(cfg: ModelConfig, shape: ShapeConfig, opt_cfg: OptimizerConfig,
+               *, steps: int = 100, seed: int = 0, log_every: int = 10,
+               mesh=None, plan: Optional[ParallelismPlan] = None,
+               non_iid: bool = True, checkpoint_dir: str = "",
+               checkpoint_every: int = 0, verbose: bool = True) -> TrainResult:
+    mesh = mesh or make_cpu_mesh()
+    plan = plan or resolve_plan(cfg, mesh, optimizer=opt_cfg.name)
+    with mesh:
+        programs = build_train_programs(cfg, shape, opt_cfg, mesh, plan)
+        R = programs.n_workers if programs.is_local else 1
+        ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=shape.seq_len,
+                         n_workers=max(R, 1), seed=seed, non_iid=non_iid)
+        params, opt_state = programs.init_fn(jax.random.PRNGKey(seed))
+
+        start_step = 0
+        if checkpoint_dir:
+            from repro.checkpoint import latest_step, restore_checkpoint
+            if latest_step(checkpoint_dir) is not None:
+                state, start_step = restore_checkpoint(
+                    checkpoint_dir, jax.eval_shape(lambda: (params, opt_state)))
+                params, opt_state = state
+                if verbose:
+                    print(f"restored checkpoint at step {start_step}")
+
+        H = programs.H if programs.is_local else 1
+        losses, ppls = [], []
+        t0 = time.time()
+        for step in range(start_step, steps):
+            batch_np = make_train_batch(cfg, shape, ds, step,
+                                        n_workers=R if programs.is_local else 0)
+            batch = jax.tree_util.tree_map(jnp.asarray, batch_np)
+            do_sync = ((step + 1) % H == 0)
+            fn = programs.sync_step if do_sync else programs.local_step
+            params, opt_state, metrics = fn(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            ppls.append(math.exp(min(loss, 30.0)))
+            if verbose and (step % log_every == 0 or step == steps - 1):
+                print(f"step {step:5d} loss {loss:8.4f} ppl {ppls[-1]:10.2f} "
+                      f"{'sync' if do_sync else 'local'}")
+            if checkpoint_dir and checkpoint_every and \
+                    (step + 1) % checkpoint_every == 0:
+                from repro.checkpoint import save_checkpoint
+                save_checkpoint(checkpoint_dir, step + 1, (params, opt_state))
+
+        wall = time.time() - t0
+        n_params = count_params(cfg)
+        comm = sync_bytes_per_step(opt_cfg.name, n_params, opt_cfg.H)
+        return TrainResult(losses=losses, ppl=ppls, steps=steps,
+                           n_workers=R, comm_bytes_per_step=comm,
+                           wall_s=wall, final_loss=float(np.mean(losses[-10:])))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="biglstm", help=f"one of {sorted(ARCHS)}")
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the smoke-sized family member (CPU-friendly)")
+    ap.add_argument("--optimizer", default="local_adaalter",
+                    choices=["sgd", "adagrad", "adaalter", "local_sgd",
+                             "local_adaalter"])
+    ap.add_argument("--H", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=0.5)
+    ap.add_argument("--warmup", type=int, default=100)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--iid", action="store_true", help="disable non-IID workers")
+    ap.add_argument("--out", default="", help="write metrics JSON here")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg, vocab=args.vocab)
+    shape = ShapeConfig(name="cli", seq_len=args.seq, global_batch=args.batch,
+                        kind="train")
+    opt_cfg = OptimizerConfig(name=args.optimizer, lr=args.lr, H=args.H,
+                              warmup_steps=args.warmup)
+    print(f"training {cfg.name} ({count_params(cfg):,} params) with "
+          f"{args.optimizer} H={args.H} on {jax.device_count()} device(s)")
+    res = train_loop(cfg, shape, opt_cfg, steps=args.steps, seed=args.seed,
+                     non_iid=not args.iid, checkpoint_dir=args.checkpoint_dir,
+                     checkpoint_every=args.checkpoint_every)
+    print(f"done in {res.wall_s:.1f}s; final loss {res.final_loss:.4f}; "
+          f"avg comm/step {res.comm_bytes_per_step / 1e6:.1f} MB "
+          f"({res.n_workers} workers)")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(dataclasses.asdict(res), f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

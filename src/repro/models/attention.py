@@ -1,0 +1,278 @@
+"""Grouped-query attention: RoPE, QKV bias, sliding window, KV cache, cross-attn.
+
+Full-sequence attention is computed blockwise (flash-style online softmax via
+``lax.scan`` over KV chunks) so that 32k-token prefill never materializes the
+(S, S) score matrix. Decode (Sq == 1) takes the direct path over the cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, init_dense
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------- #
+# parameters
+# --------------------------------------------------------------------------- #
+def init_attention(key, cfg, dtype=jnp.float32):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(ks[0], d, h * hd, dtype=dtype),
+        "wk": init_dense(ks[1], d, kv * hd, dtype=dtype),
+        "wv": init_dense(ks[2], d, kv * hd, dtype=dtype),
+        "wo": init_dense(ks[3], h * hd, d, dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    return p
+
+
+def _project_qkv(params, xq, xkv, cfg):
+    b, sq, _ = xq.shape
+    skv = xkv.shape[1]
+    q = xq @ params["wq"]
+    k = xkv @ params["wk"]
+    v = xkv @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    q = q.reshape(b, sq, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, skv, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, skv, cfg.n_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+# --------------------------------------------------------------------------- #
+# core attention math
+# --------------------------------------------------------------------------- #
+def _mask(pos_q, pos_kv, causal: bool, window: int, valid_kv=None):
+    """(..., Sq, Skv) additive mask in fp32."""
+    m = jnp.zeros(pos_q.shape[:-1] + (pos_q.shape[-1], pos_kv.shape[-1]), jnp.float32)
+    pq = pos_q[..., :, None]
+    pk = pos_kv[..., None, :]
+    if causal:
+        m = jnp.where(pk > pq, NEG_INF, m)
+    if window:
+        m = jnp.where(pq - pk >= window, NEG_INF, m)
+    if valid_kv is not None:
+        m = jnp.where(valid_kv[..., None, :], m, NEG_INF)
+    return m
+
+
+def direct_attention(q, k, v, pos_q, pos_kv, *, causal: bool, window: int = 0,
+                     valid_kv=None):
+    """Unblocked attention. q: (B,Sq,H,hd)  k,v: (B,Skv,KV,hd)."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    scale = hd ** -0.5
+    qg = q.reshape(b, sq, kvh, rep, hd).astype(jnp.float32)
+    scores = jnp.einsum("bqkrh,bskh->bkrqs", qg, k.astype(jnp.float32)) * scale
+    mask = _mask(pos_q, pos_kv, causal, window, valid_kv)       # (B?,Sq,Skv)
+    scores = scores + mask[:, None, None] if mask.ndim == 3 else scores + mask
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkrqs,bskh->bqkrh", w, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def blockwise_attention(q, k, v, pos_q, pos_kv, *, causal: bool,
+                        window: int = 0, kv_block: int = 1024,
+                        bf16_probs: bool = False):
+    """Flash-style online-softmax attention, scanning over KV chunks.
+
+    Memory is O(Sq * kv_block) instead of O(Sq * Skv).
+    """
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    if skv <= 2 * kv_block:
+        return direct_attention(q, k, v, pos_q, pos_kv, causal=causal, window=window)
+    rep = h // kvh
+    scale = hd ** -0.5
+
+    pad = (-skv) % kv_block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos_kv = jnp.pad(pos_kv, ((0, 0), (0, pad)), constant_values=2 ** 30)
+    n_blocks = k.shape[1] // kv_block
+
+    qg = (q.reshape(b, sq, kvh, rep, hd) * scale).astype(jnp.float32)
+    kb = k.reshape(b, n_blocks, kv_block, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, n_blocks, kv_block, kvh, hd).transpose(1, 0, 2, 3, 4)
+    pb = pos_kv.reshape(b, n_blocks, kv_block).transpose(1, 0, 2)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        k_c, v_c, p_c = blk
+        s = jnp.einsum("bqkrh,bskh->bkrqs", qg, k_c.astype(jnp.float32))
+        msk = _mask(pos_q, p_c, causal, window)                  # (B,Sq,kvb)
+        s = s + msk[:, None, None]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        if bf16_probs:
+            # §Perf (cfg.attn_bf16_probs): probabilities ride to the PV
+            # matmul in the value dtype — the block-stacked p residuals
+            # saved for the scan backward halve; the f32 m/l accumulators
+            # keep the softmax normalization exact.
+            pv = jnp.einsum("bkrqs,bskh->bkrqh", p.astype(v_c.dtype), v_c,
+                            preferred_element_type=jnp.float32)
+        else:
+            pv = jnp.einsum("bkrqs,bskh->bkrqh", p, v_c.astype(jnp.float32))
+        acc = acc * corr[..., None] + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, kvh, rep, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, rep, sq), jnp.float32)
+    a0 = jnp.zeros((b, kvh, rep, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]                 # (b,kv,rep,sq,hd)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# block-level API
+# --------------------------------------------------------------------------- #
+def _tp_pad_heads(q, k, v, cfg):
+    """Beyond-paper (§Perf): make attention shard cleanly over the TP axis.
+
+    GQA head counts that do not divide the mesh 'model' axis (qwen: 28 q /
+    4 kv heads on 16-way TP) force GSPMD to contract over a sharded
+    head_dim, emitting score-sized partial-sum all-reduces inside the KV
+    scan (measured: 75% of the per-step collective bytes). Padding q to the
+    next multiple of the TP size and repeating k/v to MHA layout makes the
+    score einsum embarrassingly parallel over heads. Cost: h_pad/h extra
+    attention FLOPs (32/28 = +14% of the attention term only).
+
+    Returns (q, k, v, orig_h, padded?) with shapes (B,S,H_pad,hd) when
+    padded (k/v repeated to H_pad as well).
+    """
+    from repro.sharding.partition import active_rules
+    rules = active_rules()
+    if rules is None or not getattr(cfg, "attn_tp_pad", False):
+        return q, k, v, cfg.n_heads, False
+    tp = rules.mesh.shape.get(rules.plan.tp_axis, 1)
+    h, kvh = cfg.n_heads, cfg.n_kv_heads
+    if tp <= 1 or (h % tp == 0 and kvh % tp == 0):
+        return q, k, v, h, False
+    h_pad = -(-h // tp) * tp
+    rep = h // kvh
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    if h_pad > h:
+        pad = ((0, 0), (0, 0), (0, h_pad - h), (0, 0))
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+    from repro.sharding.partition import constraint
+    q = constraint(q, ("batch", "seq", "heads_tp", None))
+    k = constraint(k, ("batch", "seq", "heads_tp", None))
+    v = constraint(v, ("batch", "seq", "heads_tp", None))
+    return q, k, v, h, True
+
+
+def self_attention(params, x, positions, cfg, *, window: int = 0,
+                   causal: bool = True, kv_block: int = 1024):
+    """Full-sequence self-attention; returns (out, (k, v)) for cache priming."""
+    q, k, v = _project_qkv(params, x, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    qa, ka, va, h, padded = _tp_pad_heads(q, k, v, cfg)
+    bf16_p = getattr(cfg, "attn_bf16_probs", False)
+    if getattr(cfg, "attn_remat", False):
+        # flash-style backward: recompute per-block scores instead of saving
+        # the stacked (S x kv_block) probability tensors for the bwd scan.
+        attn_fn = jax.checkpoint(
+            lambda *a: blockwise_attention(*a, causal=causal, window=window,
+                                           kv_block=kv_block,
+                                           bf16_probs=bf16_p))
+        out = attn_fn(qa, ka, va, positions, positions)
+    else:
+        out = blockwise_attention(qa, ka, va, positions, positions,
+                                  causal=causal, window=window,
+                                  kv_block=kv_block, bf16_probs=bf16_p)
+    if padded:
+        out = out[:, :, :h, :]
+    out = out.reshape(x.shape[0], x.shape[1], -1) @ params["wo"]
+    return out, (k, v)
+
+
+def cross_attention_cached(params, x, k, v, cfg):
+    """Cross-attention with precomputed (cached) K/V. x: (B,Sq,D)."""
+    b, sq, _ = x.shape
+    q = x @ params["wq"]
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(q.dtype)
+    q = q.reshape(b, sq, cfg.n_heads, cfg.head_dim)
+    pos_q = jnp.zeros((b, sq), jnp.int32)
+    pos_kv = jnp.zeros((b, k.shape[1]), jnp.int32)
+    out = direct_attention(q, k, v, pos_q, pos_kv, causal=False)
+    return out.reshape(b, sq, -1) @ params["wo"]
+
+
+def cross_attention_full(params, x, kv_src, cfg):
+    """Cross-attention computing K/V from kv_src; returns (out, (k, v))."""
+    b, sq, _ = x.shape
+    q, k, v = _project_qkv(params, x, kv_src, cfg)
+    pos_q = jnp.zeros((b, sq), jnp.int32)
+    pos_kv = jnp.zeros((b, k.shape[1]), jnp.int32)
+    out = blockwise_attention(q, k, v, pos_q, pos_kv, causal=False)
+    out = out.reshape(b, sq, -1) @ params["wo"]
+    return out, (k, v)
+
+
+# --------------------------------------------------------------------------- #
+# decode with KV cache
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class KVCacheSpec:
+    """Self-attn cache layout: ring buffer of size cache_len.
+
+    For full attention cache_len == max_seq; for sliding-window archs
+    cache_len == window (bounded state => sub-quadratic long-context decode).
+    """
+    cache_len: int
+    windowed: bool
+
+
+def decode_self_attention(params, x, cache_k, cache_v, pos, cfg,
+                          spec: KVCacheSpec):
+    """One-token decode. x: (B,1,D); cache_k/v: (B,cache_len,KV,hd); pos: (B,).
+
+    Returns (out, new_k, new_v).
+    """
+    b = x.shape[0]
+    q, k, v = _project_qkv(params, x, x, cfg)
+    positions = pos[:, None]                                   # (B,1)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    slot = (pos % spec.cache_len) if spec.windowed else pos
+    oh = jax.nn.one_hot(slot, spec.cache_len, dtype=k.dtype)   # (B,L)
+    cache_k = cache_k * (1.0 - oh[:, :, None, None]) + oh[:, :, None, None] * k
+    cache_v = cache_v * (1.0 - oh[:, :, None, None]) + oh[:, :, None, None] * v
+
+    idx = jnp.arange(spec.cache_len)[None, :]
+    if spec.windowed:
+        # Entry j holds absolute position: reconstruct from ring layout.
+        base = (pos[:, None] // spec.cache_len) * spec.cache_len
+        pos_kv = jnp.where(idx <= (pos[:, None] % spec.cache_len), base + idx,
+                           base - spec.cache_len + idx)
+        valid = pos_kv >= 0
+    else:
+        pos_kv = idx * jnp.ones((b, 1), jnp.int32)
+        valid = idx <= pos[:, None]
+    out = direct_attention(q, cache_k, cache_v, positions, pos_kv,
+                           causal=True, window=0, valid_kv=valid)
+    out = out.reshape(b, 1, -1) @ params["wo"]
+    return out, cache_k, cache_v

@@ -1,0 +1,116 @@
+"""Analytic parameter counts per architecture (used by rooflines).
+
+These match the concrete pytrees produced by ``repro.models.model.init``
+exactly; ``tests/test_models_smoke.py`` asserts the equality.
+"""
+from __future__ import annotations
+
+from repro.configs import base as _base
+
+
+def _attn_params(cfg: "_base.ModelConfig", cross: bool = False) -> int:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    n = d * h * hd + 2 * d * kv * hd + h * hd * d          # wq, wk, wv, wo
+    if cfg.qkv_bias:
+        n += h * hd + 2 * kv * hd
+    if cross:
+        n += d                                              # extra q-norm? no: gate
+    return n
+
+
+def _mlp_params(cfg, d_ff: int) -> int:
+    d = cfg.d_model
+    if cfg.act == "swiglu":
+        return 3 * d * d_ff
+    return 2 * d * d_ff
+
+
+def _ssm_params(cfg) -> int:
+    d, di, n, hd = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    nh = di // hd
+    in_proj = d * (2 * di + 2 * n + nh)                     # z, x, B, C, dt
+    conv = cfg.ssm_conv * (di + 2 * n)                      # depthwise conv over x,B,C
+    other = nh + nh + nh                                    # A_log, D, dt_bias
+    norm = di
+    out = di * d
+    return in_proj + conv + other + norm + out
+
+
+def _moe_params(cfg) -> int:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    n = d * e                                               # router
+    per_expert = 3 * d * f if cfg.act == "swiglu" else 2 * d * f
+    n += e * per_expert
+    if cfg.shared_expert:
+        n += _mlp_params(cfg, cfg.dense_d_ff)
+    return n
+
+
+def _block_params(cfg, kind: str) -> int:
+    d = cfg.d_model
+    if kind == "ssm":
+        return _ssm_params(cfg) + d                          # + pre-norm
+    n = 0
+    if kind in ("self_dense", "self_moe", "cross"):
+        n += _attn_params(cfg) + 2 * d                       # attn + ln1 + ln2
+        if kind == "self_moe":
+            n += _moe_params(cfg)
+        elif kind == "cross":
+            n += _mlp_params(cfg, cfg.dense_d_ff or cfg.d_ff) + 1  # gate scalar
+        else:
+            n += _mlp_params(cfg, cfg.dense_d_ff if (cfg.is_moe and cfg.moe_every > 1) else cfg.d_ff)
+    if kind == "hybrid":
+        n += _attn_params(cfg) + _ssm_params(cfg) + 3 * d    # ln1 + ln2 + fuse norms... see model
+        n += _mlp_params(cfg, cfg.d_ff)
+    return n
+
+
+def layer_kinds(cfg) -> list:
+    """The per-layer kind sequence for the decoder stack."""
+    kinds = []
+    for i in range(cfg.n_layers):
+        if cfg.family == "ssm":
+            kinds.append("ssm")
+        elif cfg.hybrid:
+            kinds.append("hybrid")
+        elif cfg.cross_attn_every and (i + 1) % cfg.cross_attn_every == 0:
+            kinds.append("cross")
+        elif cfg.is_moe and (i + 1) % cfg.moe_every == 0:
+            kinds.append("self_moe")
+        else:
+            kinds.append("self_dense")
+    return kinds
+
+
+def count_params(cfg) -> int:
+    if cfg.family == "lstm":
+        e, h, p, v = cfg.lstm_proj, cfg.d_model, cfg.lstm_proj, cfg.vocab_size
+        n = v * e                                            # embedding
+        per = 4 * h * (e + p) + 4 * h + h * p                # LSTMP cell (in=proj size)
+        n += cfg.n_layers * per
+        n += p * v + v                                       # softmax
+        return n
+
+    n = cfg.vocab_size * cfg.d_model                         # embedding
+    for kind in layer_kinds(cfg):
+        n += _block_params(cfg, kind)
+    if cfg.is_encdec:
+        # encoder: self_dense blocks without causal mask + cross-attn in decoder
+        n += cfg.n_encoder_layers * (_attn_params(cfg) + _mlp_params(cfg, cfg.d_ff) + 2 * cfg.d_model)
+        n += cfg.n_layers * (_attn_params(cfg) + cfg.d_model)  # decoder cross-attn + ln
+        n += cfg.d_model                                     # encoder final norm
+    n += cfg.d_model                                         # final norm
+    if not cfg.tie_embeddings:
+        n += cfg.d_model * cfg.vocab_size                    # lm head
+    return n
+
+
+def count_active_params(cfg) -> int:
+    """Per-token active parameters (MoE: top_k experts + shared)."""
+    if not cfg.is_moe:
+        return count_params(cfg)
+    n = count_params(cfg)
+    per_expert = (3 if cfg.act == "swiglu" else 2) * cfg.d_model * cfg.d_ff
+    n_moe_layers = sum(1 for k in layer_kinds(cfg) if k == "self_moe")
+    inactive = n_moe_layers * (cfg.n_experts - cfg.top_k) * per_expert
+    return n - inactive

@@ -1,0 +1,82 @@
+"""Shared neural-net building blocks (pure functions over param pytrees)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def init_dense(key, d_in: int, d_out: int, scale: Optional[float] = None,
+               dtype=jnp.float32):
+    scale = (1.0 / d_in) ** 0.5 if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def swiglu(x, w1, w3, w2):
+    """SwiGLU MLP: (silu(x@w1) * (x@w3)) @ w2.
+
+    w1: (D,F)  w3: (D,F)  w2: (F,D)
+    """
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def gelu_mlp(x, w1, w2):
+    return jax.nn.gelu(x @ w1) @ w2
+
+
+def mlp_apply(params, x, act: str):
+    if act == "swiglu":
+        return swiglu(x, params["w1"], params["w3"], params["w2"])
+    if act == "gelu":
+        return gelu_mlp(x, params["w1"], params["w2"])
+    return jax.nn.relu(x @ params["w1"]) @ params["w2"]
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {
+            "w1": init_dense(k1, d_model, d_ff, dtype=dtype),
+            "w3": init_dense(k2, d_model, d_ff, dtype=dtype),
+            "w2": init_dense(k3, d_ff, d_model, dtype=dtype),
+        }
+    return {
+        "w1": init_dense(k1, d_model, d_ff, dtype=dtype),
+        "w2": init_dense(k2, d_ff, d_model, dtype=dtype),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# RoPE
+# --------------------------------------------------------------------------- #
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dropout(key, x, rate: float, deterministic: bool):
+    if deterministic or rate == 0.0:
+        return x
+    keep = jax.random.bernoulli(key, 1.0 - rate, x.shape)
+    return jnp.where(keep, x / (1.0 - rate), jnp.zeros_like(x))

@@ -1,0 +1,165 @@
+"""Mamba-2 (SSD, state-space duality) mixer — chunked scan + O(1) decode.
+
+Implements the chunked SSD algorithm of arXiv:2405.21060: within a chunk the
+recurrence is evaluated in its dual "attention-like" quadratic form; across
+chunks the (heads, head_dim, state) recurrent state is carried by
+``lax.scan``. Decode is the plain recurrence — constant state, which is what
+makes the ssm/hybrid archs run ``long_500k`` natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense, rms_norm
+
+
+def init_ssm(key, cfg, dtype=jnp.float32):
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = cfg.n_ssm_heads
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * di + 2 * n + nh
+    return {
+        "in_proj": init_dense(ks[0], d, proj_out, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, di + 2 * n)) * 0.1).astype(dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(dtype),
+        "D": jnp.ones((nh,), dtype),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": init_dense(ks[2], di, d, dtype=dtype),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    di, n, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * n]
+    dt = zxbcdt[..., di + di + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w):
+    """Depthwise causal conv. xbc: (B,L,C); conv_w: (W,C)."""
+    w = conv_w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (w - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * conv_w[i] for i in range(w))
+    return jax.nn.silu(out)
+
+
+def ssm_forward(params, x, cfg, *, return_state: bool = False):
+    """Full-sequence SSD. x: (B,L,D) with L % ssm_chunk == 0 (padded if not)."""
+    b, L, _ = x.shape
+    di, n, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    c = cfg.ssm_chunk
+    pad = (-L) % c
+    zxbcdt = x @ params["in_proj"]
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(xbc, params["conv_w"])
+    if pad:
+        z = jnp.pad(z, ((0, 0), (0, pad), (0, 0)))
+        xbc = jnp.pad(xbc, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    Lp = L + pad
+    nz = Lp // c
+
+    xs = xbc[..., :di].reshape(b, nz, c, nh, hd).astype(jnp.float32)
+    Bm = xbc[..., di:di + n].reshape(b, nz, c, n).astype(jnp.float32)
+    Cm = xbc[..., di + n:].reshape(b, nz, c, n).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,Lp,nh)
+    dt = dt.reshape(b, nz, c, nh)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))              # (nh,)
+    dA = dt * A                                                    # (B,nz,c,nh)
+    cum = jnp.cumsum(dA, axis=2)                                   # (B,nz,c,nh)
+
+    xbar = xs * dt[..., None]                                      # (B,nz,c,nh,hd)
+    if getattr(cfg, "ssm_pallas", False) and not return_state:
+        # Fused Pallas chunk scan (forward-only: serving/prefill path; the
+        # cross-chunk state stays in VMEM — see kernels/ssd_scan.py).
+        from repro.kernels.ssd_scan import ssd_scan
+        y = ssd_scan(xbar, Bm, Cm, dA, interpret=jax.default_backend() != "tpu")
+        S_last = None
+    else:
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        # intra-chunk dual form
+        CB = jnp.einsum("bzln,bzsn->bzls", Cm, Bm)                 # (B,nz,c,c)
+        logdecay = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,nz,l,s,nh)
+        logdecay = jnp.where(tri[None, None, :, :, None], logdecay, -jnp.inf)
+        M = CB[..., None] * jnp.exp(logdecay)
+        y = jnp.einsum("bzlsh,bzshp->bzlhp", M, xbar)
+
+        # chunk boundary states
+        seg = jnp.exp(cum[:, :, -1:, :] - cum)                     # decay to chunk end
+        chunk_states = jnp.einsum("bzsn,bzsh,bzshp->bzhnp", Bm, seg, xbar)
+        chunk_decay = jnp.exp(cum[:, :, -1, :])                    # (B,nz,nh)
+
+        def scan_fn(S, inp):
+            st, dk = inp                                           # (B,nh,N,P), (B,nh)
+            S_new = S * dk[..., None, None] + st
+            return S_new, S                                        # emit state BEFORE chunk
+
+        S0 = jnp.zeros((b, nh, n, hd), jnp.float32)
+        S_last, S_before = jax.lax.scan(
+            scan_fn, S0,
+            (chunk_states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+        S_before = S_before.transpose(1, 0, 2, 3, 4)               # (B,nz,nh,N,P)
+
+        # inter-chunk contribution
+        y = y + jnp.einsum("bzln,bzlh,bzhnp->bzlhp", Cm, jnp.exp(cum), S_before)
+    y = y + params["D"].astype(jnp.float32)[None, None, None, :, None] * xs
+    y = y.reshape(b, Lp, di)[:, :L]
+    z = z[:, :L]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(x.dtype), params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    if return_state:
+        conv_state = _conv_tail(x, params, cfg)
+        return out, (S_last, conv_state)
+    return out
+
+
+def _conv_tail(x, params, cfg):
+    """Last (W-1) pre-conv channel rows, for decode continuation."""
+    w = params["conv_w"].shape[0]
+    zxbcdt = x[:, -(w - 1):] @ params["in_proj"]
+    _, xbc, _ = _split_proj(cfg, zxbcdt)
+    pad = (w - 1) - xbc.shape[1]
+    if pad > 0:
+        xbc = jnp.pad(xbc, ((0, 0), (pad, 0), (0, 0)))
+    return xbc
+
+
+def init_ssm_state(cfg, batch, dtype=jnp.float32):
+    nh, n, hd = cfg.n_ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    return (
+        jnp.zeros((batch, nh, n, hd), jnp.float32),
+        jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner + 2 * cfg.ssm_state), dtype),
+    )
+
+
+def ssm_decode_step(params, x, state, cfg):
+    """One-token recurrence. x: (B,1,D); state: (S, conv_tail)."""
+    S, conv_tail = state
+    b = x.shape[0]
+    di, n, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    zxbcdt = x[:, 0] @ params["in_proj"]                           # (B, P)
+    z, xbc_new, dt = _split_proj(cfg, zxbcdt)
+    window = jnp.concatenate([conv_tail, xbc_new[:, None]], axis=1)  # (B,W,C)
+    xbc = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, params["conv_w"]))
+    new_tail = window[:, 1:]
+
+    xs = xbc[:, :di].reshape(b, nh, hd).astype(jnp.float32)
+    Bm = xbc[:, di:di + n].astype(jnp.float32)
+    Cm = xbc[:, di + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)                                           # (B,nh)
+    S = S * dA[..., None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", Bm, dt, xs)
+    y = jnp.einsum("bn,bhnp->bhp", Cm, S)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xs
+    y = y.reshape(b, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(x.dtype), params["norm"], cfg.norm_eps)
+    out = (y @ params["out_proj"])[:, None]
+    return out, (S, new_tail)

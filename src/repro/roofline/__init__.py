@@ -1,0 +1,8 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+from repro.roofline.analysis import (
+    Hardware, RooflineReport, V5E, analyze, collective_wire_bytes,
+    model_flops, parse_collectives,
+)
+
+__all__ = ["Hardware", "RooflineReport", "V5E", "analyze",
+           "collective_wire_bytes", "model_flops", "parse_collectives"]

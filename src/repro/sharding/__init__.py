@@ -1,0 +1,9 @@
+from repro.sharding.partition import (
+    DEFAULT_RULES,
+    ShardingRules,
+    active_rules,
+    constraint,
+    use_rules,
+)
+
+__all__ = ["DEFAULT_RULES", "ShardingRules", "active_rules", "constraint", "use_rules"]

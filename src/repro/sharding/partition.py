@@ -1,0 +1,101 @@
+"""Logical-axis sharding: MaxText-style rules mapping logical names to mesh axes.
+
+Models annotate activations/params with *logical* axis names; a
+:class:`ShardingRules` context maps those to physical mesh axes. Outside any
+context (unit tests, single-device runs) the annotations are no-ops.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+DEFAULT_RULES: Dict[str, Optional[str]] = {
+    # activations
+    "workers": "__local__",        # resolved to the plan's local axes
+    "batch": "__data__",           # resolved to grad/fsdp axes ("data")
+    "seq": None,
+    "seq_sp": None,             # residual-stream seq axis (=model under seq_parallel)
+    "embed": None,
+    "q_heads": "model",
+    "kv_heads": "model",
+    "heads_tp": "model",           # padded/repeated attention heads (§Perf)
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "capacity": None,
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "ssm_inner": "model",
+    "frames": None,
+    "image": None,
+    # weights
+    "embed_fsdp": "__fsdp__",      # embed dim of weights, ZeRO-sharded
+    "lstm_hidden": "model",
+}
+
+
+class ShardingRules:
+    def __init__(self, mesh: Mesh, plan, overrides: Optional[Dict[str, Optional[str]]] = None):
+        self.mesh = mesh
+        self.plan = plan
+        self.rules = dict(DEFAULT_RULES)
+        if overrides:
+            self.rules.update(overrides)
+
+    def resolve(self, logical: Sequence[Optional[str]]) -> P:
+        axes = []
+        used = set()
+        for name in logical:
+            if name is None:
+                axes.append(None)
+                continue
+            ax = self.rules.get(name, None)
+            if ax == "__local__":
+                ax = tuple(self.plan.local_axes) or None
+            elif ax == "__data__":
+                ax = tuple(a for a in self.plan.grad_axes) or None
+            elif ax == "__fsdp__":
+                ax = tuple(self.plan.fsdp_axes) or None
+            if isinstance(ax, str):
+                ax = (ax,)
+            if ax:
+                ax = tuple(a for a in ax if a in self.mesh.shape and a not in used)
+                used.update(ax)
+                axes.append(ax if len(ax) > 1 else ax[0] if ax else None)
+            else:
+                axes.append(None)
+        return P(*axes)
+
+    def named_sharding(self, logical: Sequence[Optional[str]]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.resolve(logical))
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def active_rules() -> Optional[ShardingRules]:
+    return getattr(_state, "rules", None)
+
+
+def constraint(x, logical: Sequence[Optional[str]]):
+    """Annotate an intermediate with logical axes (no-op without rules)."""
+    rules = active_rules()
+    if rules is None:
+        return x
+    spec = rules.resolve(logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))

@@ -1,0 +1,149 @@
+"""Per-leaf parameter sharding specs derived from pytree paths.
+
+Maps every parameter leaf (by its name/ancestry in the param pytree) to
+logical axes, resolves those through :class:`ShardingRules`, prepends the
+local-SGD worker axis where applicable, and drops mesh axes that do not
+divide the concrete dimension (shape-safe).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+from repro.sharding.partition import ShardingRules
+
+_STACKED_ROOTS = ("blocks", "encoder")
+
+_BY_NAME = {
+    "embed": ("vocab", "embed_fsdp"),
+    "lm_head": ("embed_fsdp", "vocab"),
+    "head_w": ("embed_fsdp", "vocab"),
+    "head_b": ("vocab",),
+    "wq": ("embed_fsdp", "q_heads"),
+    "wk": ("embed_fsdp", "q_heads"),
+    "wv": ("embed_fsdp", "q_heads"),
+    "wo": ("q_heads", "embed_fsdp"),
+    "bq": ("q_heads",),
+    "bk": ("q_heads",),
+    "bv": ("q_heads",),
+    "in_proj": ("embed_fsdp", "ssm_inner"),
+    "conv_w": (None, "ssm_inner"),
+    "out_proj": ("ssm_inner", "embed_fsdp"),
+    "norm": ("ssm_inner",),
+    "router": ("embed_fsdp", None),
+    "wx": ("embed_fsdp", "lstm_hidden"),
+    "wh": ("embed_fsdp", "lstm_hidden"),
+    "b": ("lstm_hidden",),
+    "wp": ("lstm_hidden", "embed_fsdp"),
+}
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        if isinstance(k, DictKey):
+            names.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            names.append(f"[{k.idx}]")
+    return tuple(names)
+
+
+def logical_for_leaf(path, leaf, *, skip_leading: int = 0) -> Tuple[Optional[str], ...]:
+    """Logical axes for a parameter leaf.
+
+    ``skip_leading``: number of leading non-semantic axes (e.g. the local-SGD
+    worker axis) to EXCLUDE — the returned tuple covers only
+    ``leaf.shape[skip_leading:]``.
+    """
+    names = _path_names(path)
+    name = names[-1]
+    in_moe = "moe" in names
+    stacked = names[0] in _STACKED_ROOTS
+
+    if name in ("w1", "w3"):
+        log = (("experts", "embed_fsdp", "mlp") if in_moe
+               else ("embed_fsdp", "mlp"))
+    elif name == "w2":
+        log = (("experts", "mlp", "embed_fsdp") if in_moe
+               else ("mlp", "embed_fsdp"))
+    elif name in _BY_NAME:
+        log = _BY_NAME[name]
+    else:
+        log = ()                                         # norms, gates, scalars
+
+    rank = leaf.ndim if hasattr(leaf, "ndim") else len(leaf.shape)
+    rank -= skip_leading
+    body = rank - (1 if stacked else 0)
+    log = tuple(log)[:body]
+    log = (None,) * (body - len(log)) + log if len(log) < body else log
+    if stacked:
+        log = (None,) + log
+    return log
+
+
+def shape_safe_spec(shape: Sequence[int], spec: P, mesh) -> P:
+    """Drop mesh axes whose product does not divide the dimension."""
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        kept = []
+        prod = 1
+        for a in axes:
+            n = mesh.shape[a]
+            if dim % (prod * n) == 0:
+                kept.append(a)
+                prod *= n
+        out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    return P(*out)
+
+
+def param_shardings(rules: ShardingRules, params: Any, *,
+                    with_workers: bool = False) -> Any:
+    """NamedSharding pytree parallel to ``params``.
+
+    ``with_workers=True`` expects every leaf to carry a leading local-SGD
+    worker axis (sharded over the plan's local axes).
+    """
+    mesh = rules.mesh
+    worker_axes = tuple(rules.plan.local_axes)
+
+    def one(path, leaf):
+        log = logical_for_leaf(path, leaf, skip_leading=1 if with_workers else 0)
+        spec = rules.resolve(log)
+        if with_workers:
+            body_shape = leaf.shape[1:]
+            spec = shape_safe_spec(body_shape, spec, mesh)
+            w = worker_axes if worker_axes else None
+            w = w if not isinstance(w, tuple) or len(w) > 1 else w[0]
+            spec = P(w, *tuple(spec))
+        else:
+            spec = shape_safe_spec(leaf.shape, spec, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def opt_state_shardings(rules: ShardingRules, opt_state, param_sh, *,
+                        with_workers: bool = False):
+    """Optimizer-state shardings.
+
+    Our optimizer states are flat dicts: scalar counters (``step``,
+    ``tprime``) plus accumulator pytrees (``b2`` / ``b2_sync`` /
+    ``b2_local``) that mirror the parameter tree exactly — so accumulators
+    reuse the parameter shardings verbatim.
+    """
+    mesh = rules.mesh
+    worker_axes = tuple(rules.plan.local_axes)
+    w = (worker_axes if len(worker_axes) > 1
+         else (worker_axes[0] if worker_axes else None))
+    scalar = NamedSharding(mesh, P(w) if (with_workers and w) else P())
+    out = {}
+    for k, v in opt_state.items():
+        out[k] = scalar if k in ("step", "tprime") else param_sh
+    return out

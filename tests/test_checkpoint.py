@@ -1,0 +1,71 @@
+"""Checkpoint store: roundtrip (incl. bfloat16), latest-step, mismatch errors."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+
+@pytest.fixture
+def state():
+    return {
+        "params": {
+            "w": jnp.asarray(np.random.default_rng(0).normal(size=(8, 4)),
+                             jnp.bfloat16),
+            "blocks": [{"a": jnp.arange(5.0)}, {"a": jnp.ones(5)}],
+        },
+        "opt": {"step": jnp.int32(7),
+                "b2": {"w": jnp.full((8, 4), 2.0)},
+                "tprime": jnp.int32(3)},
+    }
+
+
+def test_roundtrip_exact(tmp_path, state):
+    d = str(tmp_path)
+    save_checkpoint(d, 7, state)
+    restored, step = restore_checkpoint(d, jax.eval_shape(lambda: state))
+    assert step == 7
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        state, restored)
+    # dtypes preserved (bfloat16 survives the npz void-dtype trap)
+    assert restored["params"]["w"].dtype == jnp.bfloat16
+
+
+def test_latest_step_picks_max(tmp_path, state):
+    d = str(tmp_path)
+    assert latest_step(d) is None
+    for s in (5, 20, 10):
+        save_checkpoint(d, s, state)
+    assert latest_step(d) == 20
+    _, step = restore_checkpoint(d, jax.eval_shape(lambda: state))
+    assert step == 20
+
+
+def test_structure_mismatch_raises(tmp_path, state):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, state)
+    bad = dict(state)
+    bad["extra"] = jnp.zeros(3)
+    with pytest.raises(ValueError, match="mismatch"):
+        restore_checkpoint(d, jax.eval_shape(lambda: bad))
+
+
+def test_shape_mismatch_raises(tmp_path, state):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, state)
+    bad = jax.eval_shape(lambda: state)
+    bad["params"]["w"] = jax.ShapeDtypeStruct((9, 4), jnp.bfloat16)
+    with pytest.raises(ValueError, match="shape"):
+        restore_checkpoint(d, bad)
+
+
+def test_overwrite_same_step(tmp_path, state):
+    d = str(tmp_path)
+    save_checkpoint(d, 3, state)
+    state2 = jax.tree_util.tree_map(
+        lambda x: x + 1 if x.dtype != jnp.bfloat16 else x, state)
+    save_checkpoint(d, 3, state2)
+    restored, _ = restore_checkpoint(d, jax.eval_shape(lambda: state))
+    np.testing.assert_array_equal(np.asarray(restored["opt"]["step"]), 8)

@@ -1,0 +1,133 @@
+"""Property-based tests (hypothesis) on the system's algebraic invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+import hypothesis.extra.numpy as hnp
+
+from repro.core import optimizers as opt
+from repro.core.comm import sync_bytes_per_step
+from repro.kernels.ref import fused_update_ref
+
+_settings = dict(max_examples=25, deadline=None)
+
+finite = st.floats(min_value=-10, max_value=10, allow_nan=False,
+                   allow_infinity=False, width=32)
+grad_arrays = hnp.arrays(np.float32, st.integers(1, 32).map(lambda n: (n,)),
+                         elements=finite)
+
+
+# --------------------------------------------------------------------------- #
+# Invariant 1 (the paper's key trick): during local steps the denominator is
+# identical on every worker — it depends only on the synced B² and t'.
+# --------------------------------------------------------------------------- #
+@settings(**_settings)
+@given(st.integers(1, 6), st.integers(2, 5), st.integers(0, 2**31 - 1))
+def test_denominator_identical_across_workers(H, n, seed):
+    rng = np.random.default_rng(seed)
+    o = opt.local_adaalter(lr=0.3, eps=1.0, b0=1.0, H=H)
+    params = {"w": jnp.broadcast_to(jnp.asarray(rng.normal(size=4),
+                                                jnp.float32), (n, 4))}
+    state = jax.vmap(o.init)(params)
+    vstep = jax.vmap(o.local_step)
+    for t in range(H):
+        g = {"w": jnp.asarray(rng.normal(size=(n, 4)), jnp.float32)}
+        params, state = vstep(g, state, params)
+        b2s = np.asarray(state["b2_sync"]["w"])
+        # every worker's b2_sync (the denominator base) identical:
+        assert np.all(b2s == b2s[0])
+        # ... while the local accumulators may differ (they carry G∘G):
+        assert np.asarray(state["tprime"]).max() == t + 1
+
+
+# --------------------------------------------------------------------------- #
+# Invariant 2: local AdaAlter with H=1 and one worker == AdaAlter exactly.
+# --------------------------------------------------------------------------- #
+@settings(**_settings)
+@given(grad_arrays, st.integers(0, 2**31 - 1))
+def test_h1_single_worker_equals_adaalter(g0, seed):
+    rng = np.random.default_rng(seed)
+    d = g0.shape[0]
+    x0 = rng.normal(size=d).astype(np.float32)
+    grads = [g0] + [rng.normal(size=d).astype(np.float32) for _ in range(3)]
+
+    a = opt.adaalter(lr=0.4, eps=1.0, b0=1.0)
+    pa = {"w": jnp.asarray(x0)}
+    sa = a.init(pa)
+    l = opt.local_adaalter(lr=0.4, eps=1.0, b0=1.0, H=1)
+    pl = {"w": jnp.asarray(x0)}
+    sl = l.init(pl)
+    for g in grads:
+        gj = {"w": jnp.asarray(g)}
+        sq = {"w": jnp.asarray(g) ** 2}
+        pa, sa = a.update(gj, sq, sa, pa)
+        pl, sl = l.local_step(gj, sl, pl)
+        pl, sl = l.sync(pl, sl)
+        np.testing.assert_allclose(np.asarray(pa["w"]), np.asarray(pl["w"]),
+                                   rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(sa["b2"]["w"]),
+                               np.asarray(sl["b2_sync"]["w"]), rtol=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# Invariant 3: the accumulator B² is monotone non-decreasing (AdaGrad family).
+# --------------------------------------------------------------------------- #
+@settings(**_settings)
+@given(st.lists(grad_arrays, min_size=2, max_size=6))
+def test_accumulator_monotone(grads):
+    d = grads[0].shape[0]
+    grads = [np.resize(g, d).astype(np.float32) for g in grads]
+    o = opt.adaalter(lr=0.1, eps=1.0, b0=1.0)
+    p = {"w": jnp.zeros(d)}
+    s = o.init(p)
+    prev = np.asarray(s["b2"]["w"]).copy()
+    for g in grads:
+        gj = {"w": jnp.asarray(g)}
+        p, s = o.update(gj, {"w": gj["w"] ** 2}, s, p)
+        cur = np.asarray(s["b2"]["w"])
+        assert np.all(cur >= prev - 1e-7)
+        prev = cur.copy()
+
+
+# --------------------------------------------------------------------------- #
+# Invariant 4: warm-up learning rate is monotone in t and capped at lr.
+# --------------------------------------------------------------------------- #
+@settings(**_settings)
+@given(st.floats(1e-4, 2.0, allow_nan=False), st.integers(1, 1000),
+       st.integers(0, 2000))
+def test_warmup_monotone_capped(lr, warm, t):
+    e_t = float(opt.warmup_lr(lr, jnp.int32(t), warm))
+    e_t1 = float(opt.warmup_lr(lr, jnp.int32(t + 1), warm))
+    assert e_t <= e_t1 + 1e-9
+    assert e_t <= lr * (1 + 1e-6)
+    if t >= warm:
+        assert abs(e_t - lr) < 1e-6 * max(lr, 1)
+
+
+# --------------------------------------------------------------------------- #
+# Invariant 5: fused-update oracle == composition of the two paper lines.
+# --------------------------------------------------------------------------- #
+@settings(**_settings)
+@given(hnp.arrays(np.float32, (16,), elements=finite),
+       hnp.arrays(np.float32, (16,), elements=finite),
+       st.floats(0.01, 1.0), st.integers(1, 8))
+def test_fused_update_is_composition(x, g, eta, tprime):
+    b2 = np.abs(np.random.default_rng(0).normal(size=16)).astype(np.float32) + 1
+    extra = tprime * 1.0
+    y, nb2 = fused_update_ref(jnp.asarray(x), jnp.asarray(g),
+                              jnp.asarray(b2), jnp.asarray(b2), eta, extra)
+    want_y = x - eta * g / np.sqrt(b2 + extra)
+    want_b2 = b2 + g * g
+    np.testing.assert_allclose(np.asarray(y), want_y, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(nb2), want_b2, rtol=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# Invariant 6: communication accounting matches the paper's 2/H claim.
+# --------------------------------------------------------------------------- #
+@settings(**_settings)
+@given(st.integers(1, 10**9), st.integers(1, 64))
+def test_comm_two_over_h(n_params, H):
+    full = sync_bytes_per_step("adagrad", n_params)
+    local = sync_bytes_per_step("local_adaalter", n_params, H)
+    assert abs(local - 2 * full / H) < 1e-6 * max(full, 1)

@@ -1,0 +1,74 @@
+"""End-to-end system behaviour: training converges, H-trade-off, restart."""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import OptimizerConfig, ShapeConfig, get_arch, reduced
+from repro.launch.train import train_loop
+
+SHAPE = ShapeConfig(name="sys", seq_len=64, global_batch=8, kind="train")
+
+
+def _cfg(vocab=256):
+    return reduced(get_arch("biglstm"), vocab=vocab)
+
+
+def test_training_reduces_loss():
+    # the transformer family learns the bigram stream fastest on CPU budgets
+    cfg = reduced(get_arch("qwen2-7b"), n_layers=2, d_model=128, vocab=256)
+    opt = OptimizerConfig(name="local_adaalter", lr=0.5, H=4, warmup_steps=10)
+    res = train_loop(cfg, SHAPE, opt, steps=60, verbose=False)
+    start = float(np.mean(res.losses[:5]))
+    assert res.final_loss < start - 0.3, (start, res.final_loss)
+    # never worse than uniform prediction
+    assert res.final_loss < math.log(cfg.vocab_size) + 0.5
+
+
+def test_adaalter_tracks_adagrad():
+    """Paper Table 2: AdaAlter's convergence is ~AdaGrad's."""
+    cfg = _cfg()
+    r_ada = train_loop(cfg, SHAPE, OptimizerConfig(
+        name="adagrad", lr=0.5, warmup_steps=0), steps=50, verbose=False)
+    r_alt = train_loop(cfg, SHAPE, OptimizerConfig(
+        name="adaalter", lr=0.5, warmup_steps=0), steps=50, verbose=False)
+    assert abs(r_ada.final_loss - r_alt.final_loss) < 0.15
+
+
+def test_larger_H_not_better():
+    """Theorem 2: noise grows with H — final loss for H=8 shouldn't beat
+    H=1 by any meaningful margin on the same stream."""
+    cfg = _cfg()
+    losses = {}
+    for H in (1, 8):
+        r = train_loop(cfg, SHAPE, OptimizerConfig(
+            name="local_adaalter", lr=0.5, H=H, warmup_steps=10),
+            steps=60, verbose=False)
+        losses[H] = r.final_loss
+    assert losses[8] > losses[1] - 0.05, losses
+
+
+def test_checkpoint_restart_continues(tmp_path):
+    cfg = _cfg()
+    opt = OptimizerConfig(name="local_adaalter", lr=0.5, H=2, warmup_steps=5)
+    d = str(tmp_path / "ckpt")
+    # run 20 steps, checkpointing every 10
+    r1 = train_loop(cfg, SHAPE, opt, steps=20, checkpoint_dir=d,
+                    checkpoint_every=10, verbose=False)
+    # "crash" and resume: asks for 30 steps, restores at 20, runs 10 more
+    r2 = train_loop(cfg, SHAPE, opt, steps=30, checkpoint_dir=d,
+                    checkpoint_every=10, verbose=False)
+    assert len(r2.losses) == 10
+    # a fresh 30-step run on the same stream must agree with the resumed one
+    r3 = train_loop(cfg, SHAPE, opt, steps=30, verbose=False)
+    np.testing.assert_allclose(r2.losses, r3.losses[20:], rtol=1e-4, atol=1e-4)
+
+
+def test_non_iid_harder_than_iid():
+    """Sanity: the non-IID stream (paper assumption) is at least as hard."""
+    cfg = _cfg()
+    opt = OptimizerConfig(name="local_adaalter", lr=0.5, H=4, warmup_steps=10)
+    r_iid = train_loop(cfg, SHAPE, opt, steps=50, non_iid=False, verbose=False)
+    r_non = train_loop(cfg, SHAPE, opt, steps=50, non_iid=True, verbose=False)
+    assert r_non.final_loss > r_iid.final_loss - 0.2
