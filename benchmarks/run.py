@@ -5,6 +5,7 @@
   bench_epoch_time   Fig. 1 (epoch time vs workers) + Fig. 2 (throughput)
   bench_convergence  Fig. 3 + Table 2 (PPL per algorithm at equal epochs)
   bench_kernels      fused AdaAlter update vs unfused lowering
+  bench_sync_compression  int8+error-feedback sync vs fp32 payload
   bench_roofline     §Roofline table from the dry-run artifacts
 """
 from __future__ import annotations
@@ -15,7 +16,7 @@ import io
 import sys
 import time
 
-ALL = ["epoch_time", "convergence", "kernels", "roofline"]
+ALL = ["epoch_time", "convergence", "kernels", "sync_compression", "roofline"]
 
 
 def main() -> None:
@@ -41,6 +42,10 @@ def main() -> None:
         elif name == "kernels":
             from benchmarks.bench_kernels import run as r
             rows += r(n=(1 << 18) if args.quick else (1 << 22))
+        elif name == "sync_compression":
+            from benchmarks.bench_sync_compression import run as r
+            rows += r(steps=60 if args.quick else 200,
+                      n=(1 << 18) if args.quick else (1 << 22))
         elif name == "roofline":
             from benchmarks.bench_roofline import run as r
             rows += r()

@@ -132,6 +132,10 @@ class OptimizerConfig:
     warmup_steps: int = 600                # paper: 600
     grad_clip: float = 0.0                 # 0 -> off
     use_pallas: bool = False               # fused Pallas update kernel
+    # quantized sync (local optimizers only): '' -> fp32 payload (paper),
+    # 'int8' -> per-block int8 + fp32 scales with error feedback (~4x less)
+    compression: str = ""
+    compression_block: int = 256           # elements per quantization block
 
 
 @dataclasses.dataclass(frozen=True)

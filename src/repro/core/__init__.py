@@ -5,6 +5,7 @@ from repro.core.optimizers import (
     Optimizer,
     adaalter,
     adagrad,
+    compressed_sync,
     is_local,
     local_adaalter,
     local_sgd,
@@ -18,6 +19,7 @@ __all__ = [
     "Optimizer",
     "adaalter",
     "adagrad",
+    "compressed_sync",
     "is_local",
     "local_adaalter",
     "local_sgd",

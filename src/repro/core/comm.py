@@ -29,18 +29,37 @@ def bytes_per_param(dtype_bytes: int = 4) -> int:
     return dtype_bytes
 
 
+def payload_bytes(n_values: int, dtype_bytes: int = 4, compression: str = "",
+                  block: int = 256) -> float:
+    """Wire bytes for one synced tensor of ``n_values`` elements.
+
+    ''     -> n · dtype_bytes (the paper's fp32 payload)
+    'int8' -> n · 1 byte + one fp32 scale per ``block`` values
+              (= n · (1 + 4/block); ~3.94x less than fp32 at block=256)
+    """
+    if not compression:
+        return float(n_values * dtype_bytes)
+    if compression == "int8":
+        return n_values * (1.0 + 4.0 / block)
+    raise ValueError(f"unknown compression {compression!r}")
+
+
 def sync_bytes_per_step(algorithm: str, n_params: int, H: int = 1,
-                        dtype_bytes: int = 4) -> float:
+                        dtype_bytes: int = 4, compression: str = "",
+                        block: int = 256) -> float:
     """Average per-step communication volume per worker (bytes).
 
     AdaGrad/AdaAlter  : gradient all-reduce every step        -> P
     Local SGD         : params every H steps                  -> P/H
     Local AdaAlter    : params + accumulators every H steps   -> 2P/H
                         (the paper's "2/H of fully synchronous" claim)
+
+    ``compression`` rescales the payload (see :func:`payload_bytes`);
+    with 'int8' Local AdaAlter moves ~P/2H instead of 2P/H.
     """
-    p = n_params * dtype_bytes
+    p = payload_bytes(n_params, dtype_bytes, compression, block)
     if algorithm in ("sgd", "adagrad", "adaalter"):
-        return float(p)
+        return p
     if algorithm == "local_sgd":
         return p / H
     if algorithm == "local_adaalter":
@@ -50,15 +69,16 @@ def sync_bytes_per_step(algorithm: str, n_params: int, H: int = 1,
 
 def step_time(algorithm: str, n_params: int, compute_time: float, n_workers: int,
               H: int = 1, fabric: FabricModel = FabricModel(),
-              cross_pod: bool = False, dtype_bytes: int = 4) -> float:
+              cross_pod: bool = False, dtype_bytes: int = 4,
+              compression: str = "", block: int = 256) -> float:
     """Paper Fig.1 model: step wall time = compute + (amortized) comm."""
+    p = payload_bytes(n_params, dtype_bytes, compression, block)
     if algorithm in ("sgd", "adagrad", "adaalter"):
-        comm = fabric.allreduce_time(n_params * dtype_bytes, n_workers, cross_pod)
+        comm = fabric.allreduce_time(p, n_workers, cross_pod)
     elif algorithm == "local_sgd":
-        comm = fabric.allreduce_time(n_params * dtype_bytes, n_workers, cross_pod) / H
+        comm = fabric.allreduce_time(p, n_workers, cross_pod) / H
     elif algorithm == "local_adaalter":
-        comm = 2.0 * fabric.allreduce_time(n_params * dtype_bytes, n_workers,
-                                           cross_pod) / H
+        comm = 2.0 * fabric.allreduce_time(p, n_workers, cross_pod) / H
     elif algorithm == "none":
         comm = 0.0
     else:

@@ -221,21 +221,130 @@ def local_adaalter(lr: float = 0.5, eps: float = 1.0, b0: float = 1.0,
 
 
 # --------------------------------------------------------------------------- #
+# quantized sync (error feedback)
+# --------------------------------------------------------------------------- #
+_RESIDUAL_KEYS = ("res_params", "res_b2")
+
+
+def compressed_sync(base: LocalOptimizer, compression: str = "int8", *,
+                    block: int = 256, use_pallas: bool = False) -> LocalOptimizer:
+    """Wrap a LocalOptimizer so its sync payload is int8-quantized.
+
+    Each worker sends ``quantize(payload + residual)`` — int8 values plus one
+    fp32 scale per ``block`` elements (~4x less than fp32) — and keeps the
+    quantization error as a per-worker residual (error feedback, Stich et
+    al. 2018 style), so the error is re-sent, not lost:
+
+        v          = payload + residual          # fp32
+        v̂          = dequantize(quantize(v))     # what the wire carries
+        residual'  = v − v̂
+        synced     = mean_workers(v̂)
+
+    The payload is params (and ``b2_local`` for Local AdaAlter). Local steps
+    are untouched — compression only changes the communication rounds. With
+    ``compression=''`` the base optimizer is returned unchanged, so the
+    uncompressed H=1 path stays bit-identical to ``adaalter``.
+
+    State gains two leaves mirroring the param tree: ``res_params`` and (if
+    the base tracks accumulators) ``res_b2`` — flat top-level keys so
+    ``opt_state_shardings`` places them exactly like the accumulators.
+    """
+    if not compression:
+        return base
+    if compression != "int8":
+        raise ValueError(f"unknown compression {compression!r}")
+
+    from repro.kernels.quantize import fake_quantize
+
+    def _fq(x, batch_ndim):
+        return fake_quantize(x, block=block,
+                             batch_ndim=min(batch_ndim, x.ndim),
+                             use_pallas=use_pallas)
+
+    def _compress(tree, residual, batch_ndim, *, clamp_nonneg: bool = False):
+        """-> (wire values cast like tree, new residual)."""
+        v = jax.tree_util.tree_map(
+            lambda x, e: x.astype(jnp.float32) + e, tree, residual)
+        vq = jax.tree_util.tree_map(lambda a: _fq(a, batch_ndim), v)
+        if clamp_nonneg:   # accumulators feed rsqrt — keep them >= 0
+            vq = jax.tree_util.tree_map(lambda q: jnp.maximum(q, 0.0), vq)
+        wire = jax.tree_util.tree_map(
+            lambda q, x: q.astype(x.dtype), vq, tree)
+        # residual vs what was ACTUALLY sent (incl. any bf16 wire cast)
+        new_res = jax.tree_util.tree_map(
+            lambda a, w: a - w.astype(jnp.float32), v, wire)
+        return wire, new_res
+
+    def init(params):
+        state = base.init(params)
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        state["res_params"] = zeros
+        if "b2_local" in state:
+            state["res_b2"] = jax.tree_util.tree_map(jnp.zeros_like, zeros)
+        return state
+
+    def local_step(grads, state, params):
+        inner = {k: v for k, v in state.items() if k not in _RESIDUAL_KEYS}
+        new_params, new_inner = base.local_step(grads, inner, params)
+        for k in _RESIDUAL_KEYS:
+            if k in state:
+                new_inner[k] = state[k]
+        return new_params, new_inner
+
+    def sync(params, state, mean_fn=_tree_mean_identity):
+        inner = {k: v for k, v in state.items() if k not in _RESIDUAL_KEYS}
+        # In the worker-stacked layout (steps.py: vmapped state, mean over
+        # axis 0) every leaf — 'step' included — carries a leading (R,) axis;
+        # quantization blocks must then never straddle workers, each of whom
+        # sends its own payload. Unstacked state quantizes whole leaves,
+        # matching comm.payload_bytes' n/block scales model.
+        bnd = 1 if getattr(state["step"], "ndim", 0) > 0 else 0
+        wire_p, res_p = _compress(params, state["res_params"], bnd)
+        res_b2 = None
+        if "res_b2" in state:
+            wire_b2, res_b2 = _compress(inner["b2_local"], state["res_b2"],
+                                        bnd, clamp_nonneg=True)
+            inner = {**inner, "b2_local": wire_b2}
+        new_params, new_inner = base.sync(wire_p, inner, mean_fn)
+        new_inner["res_params"] = res_p
+        if res_b2 is not None:
+            new_inner["res_b2"] = res_b2
+        return new_params, new_inner
+
+    return LocalOptimizer(init, local_step, sync, base.H)
+
+
+# --------------------------------------------------------------------------- #
 # factory
 # --------------------------------------------------------------------------- #
 def make_optimizer(cfg) -> Any:
     """cfg: OptimizerConfig -> Optimizer | LocalOptimizer."""
-    if cfg.name == "sgd":
-        return sgd(cfg.lr, cfg.warmup_steps)
-    if cfg.name == "adagrad":
-        return adagrad(cfg.lr, cfg.eps, cfg.b0, cfg.warmup_steps)
-    if cfg.name == "adaalter":
+    compression = getattr(cfg, "compression", "")
+    if cfg.name in ("sgd", "adagrad", "adaalter"):
+        if compression:
+            # only the sync rounds of local optimizers are compressed;
+            # silently ignoring it here would let train_loop report ~4x
+            # less comm than actually moves
+            raise ValueError(
+                f"compression={compression!r} requires a local optimizer "
+                f"(local_sgd / local_adaalter), got {cfg.name!r}")
+        if cfg.name == "sgd":
+            return sgd(cfg.lr, cfg.warmup_steps)
+        if cfg.name == "adagrad":
+            return adagrad(cfg.lr, cfg.eps, cfg.b0, cfg.warmup_steps)
         return adaalter(cfg.lr, cfg.eps, cfg.b0, cfg.warmup_steps)
     if cfg.name == "local_sgd":
-        return local_sgd(cfg.lr, cfg.H, cfg.warmup_steps)
-    if cfg.name == "local_adaalter":
-        return local_adaalter(cfg.lr, cfg.eps, cfg.b0, cfg.H, cfg.warmup_steps)
-    raise ValueError(f"unknown optimizer {cfg.name!r}")
+        opt = local_sgd(cfg.lr, cfg.H, cfg.warmup_steps)
+    elif cfg.name == "local_adaalter":
+        opt = local_adaalter(cfg.lr, cfg.eps, cfg.b0, cfg.H, cfg.warmup_steps)
+    else:
+        raise ValueError(f"unknown optimizer {cfg.name!r}")
+    if compression:
+        opt = compressed_sync(opt, compression,
+                              block=getattr(cfg, "compression_block", 256),
+                              use_pallas=cfg.use_pallas)
+    return opt
 
 
 def is_local(opt) -> bool:

@@ -14,6 +14,26 @@ def fused_update_ref(x, g, b2_sync, b2_local, eta, extra):
     return y, new_b2
 
 
+def quantize_blocks_ref(x2d):
+    """Symmetric per-block int8 quantization oracle.
+
+    x2d: (nblocks, block) — one quantization block per row.
+    Returns (q int8 (nblocks, block), scales fp32 (nblocks, 1)) with
+    scale = max|block| / 127 and q = round(x / scale) ∈ [−127, 127]
+    (all-zero blocks get scale 0 and quantize to 0).
+    """
+    x = x2d.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x), axis=1, keepdims=True) / 127.0
+    inv = jnp.where(scale > 0, 1.0 / jnp.where(scale > 0, scale, 1.0), 0.0)
+    q = jnp.clip(jnp.round(x * inv), -127.0, 127.0).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_blocks_ref(q2d, scales):
+    """Inverse of :func:`quantize_blocks_ref`: x̂ = q · scale (fp32)."""
+    return q2d.astype(jnp.float32) * scales
+
+
 def ssd_ref(xbar, Bm, Cm, dA):
     """Pure-jnp oracle for the SSD chunk scan (mirrors models/ssm.py math).
 

@@ -12,6 +12,10 @@ Training with a *local* optimizer (the paper's Algorithms 2/4):
   The two variants are compiled separately (static ``do_sync``) so the
   dry-run can attribute collective bytes to each and report the amortized
   ``local + sync/H`` volume exactly.
+  With ``OptimizerConfig.compression='int8'`` the sync payload is quantized
+  (per-block int8 + fp32 scales, error feedback) by the ``compressed_sync``
+  wrapper inside ``opt.sync`` — only the sync_step changes; local steps stay
+  communication-free and untouched.
 
 Training with a synchronous optimizer (Alg. 1/3, or models too large for
 per-worker replicas): classic data-parallel/FSDP — gradients are implicitly
@@ -98,22 +102,35 @@ def build_train_programs(cfg: ModelConfig, shape: ShapeConfig,
     spmd_axes = tuple(plan.local_axes)
 
     # ---------------- abstract init (for shardings) ---------------------- #
-    def raw_init(rng):
-        params = model.init(rng)
+    def _expand(base):
+        """base params (no worker axis) -> (params, opt_state), full layout."""
         if local:
             params = jax.tree_util.tree_map(
-                lambda x: jnp.broadcast_to(x[None], (R,) + x.shape), params)
-            state = jax.vmap(opt.init if opt_lib.is_local(opt) else opt.init)(params)
+                lambda x: jnp.broadcast_to(x[None], (R,) + x.shape), base)
+            state = jax.vmap(opt.init)(params)
         else:
-            state = opt.init(params)
+            params, state = base, opt.init(base)
         return params, state
+
+    def raw_init(rng):
+        return _expand(model.init(rng))
 
     with use_rules(rules):
         abstract = jax.eval_shape(raw_init, jax.random.PRNGKey(0))
     p_sh = param_shardings(rules, abstract[0], with_workers=local)
     s_sh = opt_state_shardings(rules, abstract[1], p_sh, with_workers=local)
 
-    init_fn = jax.jit(raw_init, out_shardings=(p_sh, s_sh))
+    # Two-stage init. The RNG draw compiles UNSHARDED: letting GSPMD partition
+    # the threefry computation changes the drawn values whenever a
+    # non-trailing dim is sharded, so the same seed produced different weights
+    # on different meshes (caught by the sharded-equivalence test). Only the
+    # draw is RNG-dependent, so the R-way broadcast and accumulator zeros are
+    # built under the target shardings — the unsharded spike is P, not ~5·R·P.
+    _draw = jax.jit(model.init)
+    _place = jax.jit(_expand, out_shardings=(p_sh, s_sh))
+
+    def init_fn(rng):
+        return _place(_draw(rng))
 
     # ---------------- loss/grad ------------------------------------------ #
     def loss_fn(params, batch):
@@ -143,8 +160,10 @@ def build_train_programs(cfg: ModelConfig, shape: ShapeConfig,
                 new_params, new_b2 = tree_fused_update(
                     params, grads, opt_state["b2_sync"], opt_state["b2_local"],
                     eta, extra, use_pallas=True)
-                new_state = {"step": step_no, "tprime": tprime,
-                             "b2_sync": opt_state["b2_sync"], "b2_local": new_b2}
+                # keep extra leaves (e.g. compressed_sync's error-feedback
+                # residuals) instead of rebuilding the dict from scratch
+                new_state = {**opt_state, "step": step_no, "tprime": tprime,
+                             "b2_local": new_b2}
             else:
                 new_params, new_state = vlocal(grads, opt_state, params)
             if do_sync:

@@ -30,23 +30,31 @@ from repro.launch.steps import build_train_programs
 from repro.models.counting import count_params
 
 
-def make_cpu_mesh(n_workers: int = 1):
-    """Mesh over however many (host) devices exist: (data, model)."""
+def make_cpu_mesh(n_workers: Optional[int] = None):
+    """(data, model) mesh over the host devices.
+
+    ``n_workers`` sizes the data (worker) axis; remaining devices go to the
+    model axis. Default (None) keeps the old behaviour: all devices on the
+    data axis. Requests that don't divide the device count fall back to that
+    default instead of silently being ignored (the old bug).
+    """
     n = jax.device_count()
-    model = 1
-    data = n
-    return jax.make_mesh((data, model), ("data", "model"))
+    data = n if n_workers is None else max(1, min(n_workers, n))
+    if n % data:
+        data = n
+    return jax.make_mesh((data, n // data), ("data", "model"))
 
 
 @dataclasses.dataclass
 class TrainResult:
-    losses: List[float]
+    losses: List[float]                    # this run only (post-restore)
     ppl: List[float]
-    steps: int
+    steps: int                             # steps executed THIS run
     n_workers: int
     comm_bytes_per_step: float
     wall_s: float
     final_loss: float
+    start_step: int = 0                    # checkpoint-restore point (0 = fresh)
 
 
 def train_loop(cfg: ModelConfig, shape: ShapeConfig, opt_cfg: OptimizerConfig,
@@ -96,10 +104,18 @@ def train_loop(cfg: ModelConfig, shape: ShapeConfig, opt_cfg: OptimizerConfig,
 
         wall = time.time() - t0
         n_params = count_params(cfg)
-        comm = sync_bytes_per_step(opt_cfg.name, n_params, opt_cfg.H)
-        return TrainResult(losses=losses, ppl=ppls, steps=steps,
+        comm = sync_bytes_per_step(opt_cfg.name, n_params, opt_cfg.H,
+                                   compression=opt_cfg.compression,
+                                   block=opt_cfg.compression_block)
+        # After a restore only the post-restore losses exist: report the
+        # steps actually executed and guard the empty-run case (restore at or
+        # past the target used to yield steps=target and a NaN-mean warning).
+        final = float(np.mean(losses[-10:])) if losses else float("nan")
+        return TrainResult(losses=losses, ppl=ppls,
+                           steps=max(steps - start_step, 0),
                            n_workers=R, comm_bytes_per_step=comm,
-                           wall_s=wall, final_loss=float(np.mean(losses[-10:])))
+                           wall_s=wall, final_loss=final,
+                           start_step=start_step)
 
 
 def main() -> None:
@@ -118,6 +134,10 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--vocab", type=int, default=512)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--compress", nargs="?", const="int8", default="",
+                    choices=["", "int8"], metavar="SCHEME",
+                    help="quantize the sync payload (local optimizers); "
+                         "bare --compress means int8 + error feedback")
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--iid", action="store_true", help="disable non-IID workers")
@@ -130,9 +150,12 @@ def main() -> None:
     shape = ShapeConfig(name="cli", seq_len=args.seq, global_batch=args.batch,
                         kind="train")
     opt_cfg = OptimizerConfig(name=args.optimizer, lr=args.lr, H=args.H,
-                              warmup_steps=args.warmup)
+                              warmup_steps=args.warmup,
+                              compression=args.compress)
     print(f"training {cfg.name} ({count_params(cfg):,} params) with "
-          f"{args.optimizer} H={args.H} on {jax.device_count()} device(s)")
+          f"{args.optimizer} H={args.H}"
+          f"{' +' + args.compress + ' sync' if args.compress else ''} "
+          f"on {jax.device_count()} device(s)")
     res = train_loop(cfg, shape, opt_cfg, steps=args.steps, seed=args.seed,
                      non_iid=not args.iid, checkpoint_dir=args.checkpoint_dir,
                      checkpoint_every=args.checkpoint_every)

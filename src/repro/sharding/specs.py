@@ -135,8 +135,9 @@ def opt_state_shardings(rules: ShardingRules, opt_state, param_sh, *,
 
     Our optimizer states are flat dicts: scalar counters (``step``,
     ``tprime``) plus accumulator pytrees (``b2`` / ``b2_sync`` /
-    ``b2_local``) that mirror the parameter tree exactly — so accumulators
-    reuse the parameter shardings verbatim.
+    ``b2_local``, and ``res_params`` / ``res_b2`` error-feedback residuals
+    under quantized sync) that mirror the parameter tree exactly — so
+    accumulators reuse the parameter shardings verbatim.
     """
     mesh = rules.mesh
     worker_axes = tuple(rules.plan.local_axes)

@@ -17,8 +17,8 @@ from repro.models import build_model
 from repro.sharding.partition import ShardingRules
 from repro.sharding.specs import param_shardings, shape_safe_spec
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-POD_MESH = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = AbstractMesh((("data", 16), ("model", 16)))
+POD_MESH = AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
 
 
 def _specs(cfg, plan, mesh, with_workers):
