@@ -6,6 +6,7 @@
   bench_convergence  Fig. 3 + Table 2 (PPL per algorithm at equal epochs)
   bench_kernels      fused AdaAlter update vs unfused lowering
   bench_sync_compression  int8+error-feedback sync vs fp32 payload
+  bench_adaptive_sync     CADA-style adaptive sync policy vs fixed H=4
   bench_roofline     §Roofline table from the dry-run artifacts
 """
 from __future__ import annotations
@@ -16,7 +17,8 @@ import io
 import sys
 import time
 
-ALL = ["epoch_time", "convergence", "kernels", "sync_compression", "roofline"]
+ALL = ["epoch_time", "convergence", "kernels", "sync_compression",
+       "adaptive_sync", "roofline"]
 
 
 def main() -> None:
@@ -46,6 +48,9 @@ def main() -> None:
             from benchmarks.bench_sync_compression import run as r
             rows += r(steps=60 if args.quick else 200,
                       n=(1 << 18) if args.quick else (1 << 22))
+        elif name == "adaptive_sync":
+            from benchmarks.bench_adaptive_sync import run as r
+            rows += r(steps=60 if args.quick else 120)
         elif name == "roofline":
             from benchmarks.bench_roofline import run as r
             rows += r()

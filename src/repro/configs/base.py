@@ -130,10 +130,21 @@ class OptimizerConfig:
     b0: float = 1.0                        # paper: b0 = 1
     H: int = 4                             # paper's best comm/noise trade-off
     warmup_steps: int = 600                # paper: 600
-    grad_clip: float = 0.0                 # 0 -> off
+    grad_clip: float = 0.0                 # global-norm clip; 0 -> off
     use_pallas: bool = False               # fused Pallas update kernel
-    # quantized sync (local optimizers only): '' -> fp32 payload (paper),
-    # 'int8' -> per-block int8 + fp32 scales with error feedback (~4x less)
+    # --- sync schedule (core/sync_policy.py; local optimizers) ---
+    # 'fixed_h'  -> the paper's every-H-steps schedule (bit-identical);
+    # 'adaptive' -> CADA-style: sync once the accumulated parameter drift
+    #               since the last sync crosses sync_threshold, never before
+    #               h_min local steps, always by h_max (0 -> 4·H).
+    sync_policy: str = "fixed_h"
+    sync_threshold: float = 0.0            # accumulated relative drift trigger
+    h_min: int = 1                         # adaptive lower bound on the period
+    h_max: int = 0                         # adaptive upper bound; 0 -> 4·H
+    # --- sync wire codec (core/codecs.py; local optimizers only) ---
+    # ''/'fp32' -> fp32 payload (paper), 'bf16' -> 2x truncation,
+    # 'int8' -> per-block int8 + fp32 scales (~4x less); lossy codecs get
+    # error feedback from compressed_sync.
     compression: str = ""
     compression_block: int = 256           # elements per quantization block
 

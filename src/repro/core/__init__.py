@@ -1,29 +1,53 @@
 """The paper's primary contribution: AdaAlter / Local AdaAlter optimizers,
-their synchronous baselines, and the communication accounting."""
+their synchronous baselines, the communication accounting, and the pluggable
+sync subsystem (when to sync: ``sync_policy``; what goes on the wire:
+``codecs``)."""
+from repro.core.codecs import CODEC_NAMES, WireCodec, get_codec
 from repro.core.optimizers import (
     LocalOptimizer,
     Optimizer,
     adaalter,
     adagrad,
+    clip_by_global_norm,
     compressed_sync,
+    global_norm,
     is_local,
     local_adaalter,
     local_sgd,
     make_optimizer,
     sgd,
     warmup_lr,
+    with_grad_clip,
+)
+from repro.core.sync_policy import (
+    POLICY_NAMES,
+    AdaptiveSyncPolicy,
+    FixedHPolicy,
+    SyncPolicy,
+    make_sync_policy,
 )
 
 __all__ = [
+    "CODEC_NAMES",
+    "POLICY_NAMES",
+    "AdaptiveSyncPolicy",
+    "FixedHPolicy",
     "LocalOptimizer",
     "Optimizer",
+    "SyncPolicy",
+    "WireCodec",
     "adaalter",
     "adagrad",
+    "clip_by_global_norm",
     "compressed_sync",
+    "get_codec",
+    "global_norm",
     "is_local",
     "local_adaalter",
     "local_sgd",
     "make_optimizer",
+    "make_sync_policy",
     "sgd",
     "warmup_lr",
+    "with_grad_clip",
 ]

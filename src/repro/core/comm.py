@@ -33,21 +33,47 @@ def payload_bytes(n_values: int, dtype_bytes: int = 4, compression: str = "",
                   block: int = 256) -> float:
     """Wire bytes for one synced tensor of ``n_values`` elements.
 
-    ''     -> n · dtype_bytes (the paper's fp32 payload)
-    'int8' -> n · 1 byte + one fp32 scale per ``block`` values
-              (= n · (1 + 4/block); ~3.94x less than fp32 at block=256)
+    Dispatches through :func:`repro.core.codecs.get_codec` so the accounting
+    here can never drift from the wire format ``compressed_sync`` simulates:
+
+    ''/'fp32' -> n · dtype_bytes (the paper's fp32 payload)
+    'bf16'    -> n · 2 (the 2x middle point, no sidecar state)
+    'int8'    -> n · 1 byte + one fp32 scale per ``block`` values
+                 (= n · (1 + 4/block); ~3.94x less than fp32 at block=256)
     """
-    if not compression:
-        return float(n_values * dtype_bytes)
-    if compression == "int8":
-        return n_values * (1.0 + 4.0 / block)
-    raise ValueError(f"unknown compression {compression!r}")
+    from repro.core.codecs import get_codec
+    return get_codec(compression, block=block).wire_bytes(
+        n_values, dtype_bytes)
+
+
+def sync_round_multiplier(algorithm: str) -> float:
+    """How many param-sized tensors one communication round moves.
+
+    AdaGrad/AdaAlter  : the gradient all-reduce               -> 1
+    Local SGD         : params                                -> 1
+    Local AdaAlter    : params + accumulators                 -> 2
+    """
+    if algorithm in ("sgd", "adagrad", "adaalter", "local_sgd"):
+        return 1.0
+    if algorithm == "local_adaalter":
+        return 2.0
+    raise ValueError(algorithm)
+
+
+def sync_payload_bytes(algorithm: str, n_params: int, dtype_bytes: int = 4,
+                       compression: str = "", block: int = 256) -> float:
+    """Per-worker wire bytes of ONE communication round (one sync for local
+    optimizers, one gradient all-reduce for synchronous ones). This is what
+    ``train_loop`` multiplies by the policy's *measured* sync count."""
+    return sync_round_multiplier(algorithm) * payload_bytes(
+        n_params, dtype_bytes, compression, block)
 
 
 def sync_bytes_per_step(algorithm: str, n_params: int, H: int = 1,
                         dtype_bytes: int = 4, compression: str = "",
                         block: int = 256) -> float:
-    """Average per-step communication volume per worker (bytes).
+    """MODELED average per-step communication volume per worker (bytes),
+    assuming the fixed every-H-steps schedule.
 
     AdaGrad/AdaAlter  : gradient all-reduce every step        -> P
     Local SGD         : params every H steps                  -> P/H
@@ -55,16 +81,15 @@ def sync_bytes_per_step(algorithm: str, n_params: int, H: int = 1,
                         (the paper's "2/H of fully synchronous" claim)
 
     ``compression`` rescales the payload (see :func:`payload_bytes`);
-    with 'int8' Local AdaAlter moves ~P/2H instead of 2P/H.
+    with 'int8' Local AdaAlter moves ~P/2H instead of 2P/H. With an
+    adaptive sync policy the schedule is data-dependent — use the measured
+    ``TrainResult.comm_bytes_per_step`` instead of this formula.
     """
-    p = payload_bytes(n_params, dtype_bytes, compression, block)
+    per_round = sync_payload_bytes(algorithm, n_params, dtype_bytes,
+                                   compression, block)
     if algorithm in ("sgd", "adagrad", "adaalter"):
-        return p
-    if algorithm == "local_sgd":
-        return p / H
-    if algorithm == "local_adaalter":
-        return 2.0 * p / H
-    raise ValueError(algorithm)
+        return per_round
+    return per_round / H
 
 
 def step_time(algorithm: str, n_params: int, compute_time: float, n_workers: int,
@@ -72,15 +97,11 @@ def step_time(algorithm: str, n_params: int, compute_time: float, n_workers: int
               cross_pod: bool = False, dtype_bytes: int = 4,
               compression: str = "", block: int = 256) -> float:
     """Paper Fig.1 model: step wall time = compute + (amortized) comm."""
+    if algorithm == "none":
+        return compute_time
     p = payload_bytes(n_params, dtype_bytes, compression, block)
-    if algorithm in ("sgd", "adagrad", "adaalter"):
-        comm = fabric.allreduce_time(p, n_workers, cross_pod)
-    elif algorithm == "local_sgd":
-        comm = fabric.allreduce_time(p, n_workers, cross_pod) / H
-    elif algorithm == "local_adaalter":
-        comm = 2.0 * fabric.allreduce_time(p, n_workers, cross_pod) / H
-    elif algorithm == "none":
-        comm = 0.0
-    else:
-        raise ValueError(algorithm)
+    mult = sync_round_multiplier(algorithm)
+    comm = mult * fabric.allreduce_time(p, n_workers, cross_pod)
+    if algorithm in ("local_sgd", "local_adaalter"):
+        comm /= H
     return compute_time + comm

@@ -47,6 +47,36 @@ def warmup_lr(base_lr: float, step, warmup_steps: int):
     return base_lr * jnp.minimum(1.0, t / warmup_steps)
 
 
+def global_norm(tree, batch_ndim: int = 0):
+    """fp32 L2 norm over all leaves; with ``batch_ndim=1`` one norm per row
+    of the leading (worker) axis, shape (R,)."""
+    sq = [jnp.sum(jnp.square(g.astype(jnp.float32)),
+                  axis=tuple(range(batch_ndim, g.ndim)))
+          for g in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(sq))
+
+
+def clip_by_global_norm(grads, max_norm: float, batch_ndim: int = 0):
+    """Scale ``grads`` so their global L2 norm is <= ``max_norm``.
+
+    Returns ``(clipped, factor)``; ``factor`` is 1 when no clipping fires
+    (and the leaves pass through bitwise untouched dtype-wise: the scale is
+    applied in fp32 and cast back). ``batch_ndim=1`` clips each worker's
+    gradient independently (the stacked layout of the fused step path).
+    ``max_norm <= 0`` disables clipping entirely.
+    """
+    if max_norm <= 0:
+        return grads, jnp.float32(1.0)
+    norm = global_norm(grads, batch_ndim)
+    factor = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-16))
+
+    def scale(g):
+        f = factor.reshape(factor.shape + (1,) * (g.ndim - batch_ndim))
+        return (g.astype(jnp.float32) * f).astype(g.dtype)
+
+    return jax.tree_util.tree_map(scale, grads), factor
+
+
 # --------------------------------------------------------------------------- #
 # fully synchronous optimizers (consume averaged gradients)
 # --------------------------------------------------------------------------- #
@@ -221,51 +251,83 @@ def local_adaalter(lr: float = 0.5, eps: float = 1.0, b0: float = 1.0,
 
 
 # --------------------------------------------------------------------------- #
-# quantized sync (error feedback)
+# gradient clipping (wraps any optimizer; cfg.grad_clip)
+# --------------------------------------------------------------------------- #
+def with_grad_clip(opt, max_norm: float):
+    """Global-norm-clip gradients before every update/local_step.
+
+    Works on both levels of the API: for an :class:`Optimizer` the averaged
+    gradient is clipped and ``sq_grads`` rescaled by the same factor² (exact
+    for the n=1 semantics the synchronous train path uses, where
+    ``sq_grads = Ḡ∘Ḡ``); for a :class:`LocalOptimizer` each worker's
+    gradient is clipped independently (the wrapper sits under the vmap), so
+    the B² accumulators fold in the *clipped* G∘G — the gradient that was
+    actually applied. Sync rounds are untouched. ``max_norm <= 0`` returns
+    the optimizer unchanged (the documented 'off' value).
+    """
+    if max_norm <= 0:
+        return opt
+    if isinstance(opt, LocalOptimizer):
+        def local_step(grads, state, params):
+            clipped, _ = clip_by_global_norm(grads, max_norm)
+            return opt.local_step(clipped, state, params)
+
+        return LocalOptimizer(opt.init, local_step, opt.sync, opt.H)
+
+    def update(grads, sq_grads, state, params):
+        clipped, factor = clip_by_global_norm(grads, max_norm)
+        sq = jax.tree_util.tree_map(
+            lambda s: (s.astype(jnp.float32) * jnp.square(factor)).astype(
+                s.dtype), sq_grads)
+        return opt.update(clipped, sq, state, params)
+
+    return Optimizer(opt.init, update)
+
+
+# --------------------------------------------------------------------------- #
+# compressed sync (wire codec + error feedback)
 # --------------------------------------------------------------------------- #
 _RESIDUAL_KEYS = ("res_params", "res_b2")
 
 
-def compressed_sync(base: LocalOptimizer, compression: str = "int8", *,
+def compressed_sync(base: LocalOptimizer, compression="int8", *,
                     block: int = 256, use_pallas: bool = False) -> LocalOptimizer:
-    """Wrap a LocalOptimizer so its sync payload is int8-quantized.
+    """Wrap a LocalOptimizer so its sync payload rides a lossy wire codec.
 
-    Each worker sends ``quantize(payload + residual)`` — int8 values plus one
-    fp32 scale per ``block`` elements (~4x less than fp32) — and keeps the
-    quantization error as a per-worker residual (error feedback, Stich et
-    al. 2018 style), so the error is re-sent, not lost:
+    ``compression`` is a codec name ('bf16', 'int8') or a
+    :class:`repro.core.codecs.WireCodec`. Each worker sends
+    ``decode(encode(payload + residual))`` — e.g. int8 values plus one fp32
+    scale per ``block`` elements (~4x less than fp32), or a bf16 truncation
+    (2x) — and keeps the compression error as a per-worker residual (error
+    feedback, Stich et al. 2018 style), so the error is re-sent, not lost:
 
         v          = payload + residual          # fp32
-        v̂          = dequantize(quantize(v))     # what the wire carries
+        v̂          = codec.roundtrip(v)          # what the wire carries
         residual'  = v − v̂
         synced     = mean_workers(v̂)
 
     The payload is params (and ``b2_local`` for Local AdaAlter). Local steps
     are untouched — compression only changes the communication rounds. With
-    ``compression=''`` the base optimizer is returned unchanged, so the
-    uncompressed H=1 path stays bit-identical to ``adaalter``.
+    ``compression=''`` (or the lossless 'fp32' codec) the base optimizer is
+    returned unchanged, so the uncompressed H=1 path stays bit-identical to
+    ``adaalter``.
 
     State gains two leaves mirroring the param tree: ``res_params`` and (if
     the base tracks accumulators) ``res_b2`` — flat top-level keys so
     ``opt_state_shardings`` places them exactly like the accumulators.
     """
-    if not compression:
+    from repro.core.codecs import get_codec
+
+    codec = get_codec(compression, block=block, use_pallas=use_pallas)
+    if codec.lossless:
         return base
-    if compression != "int8":
-        raise ValueError(f"unknown compression {compression!r}")
-
-    from repro.kernels.quantize import fake_quantize
-
-    def _fq(x, batch_ndim):
-        return fake_quantize(x, block=block,
-                             batch_ndim=min(batch_ndim, x.ndim),
-                             use_pallas=use_pallas)
 
     def _compress(tree, residual, batch_ndim, *, clamp_nonneg: bool = False):
         """-> (wire values cast like tree, new residual)."""
         v = jax.tree_util.tree_map(
             lambda x, e: x.astype(jnp.float32) + e, tree, residual)
-        vq = jax.tree_util.tree_map(lambda a: _fq(a, batch_ndim), v)
+        vq = jax.tree_util.tree_map(
+            lambda a: codec.roundtrip(a, min(batch_ndim, a.ndim)), v)
         if clamp_nonneg:   # accumulators feed rsqrt — keep them >= 0
             vq = jax.tree_util.tree_map(lambda q: jnp.maximum(q, 0.0), vq)
         wire = jax.tree_util.tree_map(
@@ -319,10 +381,16 @@ def compressed_sync(base: LocalOptimizer, compression: str = "int8", *,
 # factory
 # --------------------------------------------------------------------------- #
 def make_optimizer(cfg) -> Any:
-    """cfg: OptimizerConfig -> Optimizer | LocalOptimizer."""
+    """cfg: OptimizerConfig -> Optimizer | LocalOptimizer.
+
+    Assembly order: base algorithm -> ``with_grad_clip`` (clips the gradient
+    every worker actually applies) -> ``compressed_sync`` (wire codec +
+    error feedback on the sync rounds only).
+    """
     compression = getattr(cfg, "compression", "")
+    grad_clip = getattr(cfg, "grad_clip", 0.0)
     if cfg.name in ("sgd", "adagrad", "adaalter"):
-        if compression:
+        if compression and compression != "fp32":
             # only the sync rounds of local optimizers are compressed;
             # silently ignoring it here would let train_loop report ~4x
             # less comm than actually moves
@@ -330,16 +398,19 @@ def make_optimizer(cfg) -> Any:
                 f"compression={compression!r} requires a local optimizer "
                 f"(local_sgd / local_adaalter), got {cfg.name!r}")
         if cfg.name == "sgd":
-            return sgd(cfg.lr, cfg.warmup_steps)
-        if cfg.name == "adagrad":
-            return adagrad(cfg.lr, cfg.eps, cfg.b0, cfg.warmup_steps)
-        return adaalter(cfg.lr, cfg.eps, cfg.b0, cfg.warmup_steps)
+            opt = sgd(cfg.lr, cfg.warmup_steps)
+        elif cfg.name == "adagrad":
+            opt = adagrad(cfg.lr, cfg.eps, cfg.b0, cfg.warmup_steps)
+        else:
+            opt = adaalter(cfg.lr, cfg.eps, cfg.b0, cfg.warmup_steps)
+        return with_grad_clip(opt, grad_clip)
     if cfg.name == "local_sgd":
         opt = local_sgd(cfg.lr, cfg.H, cfg.warmup_steps)
     elif cfg.name == "local_adaalter":
         opt = local_adaalter(cfg.lr, cfg.eps, cfg.b0, cfg.H, cfg.warmup_steps)
     else:
         raise ValueError(f"unknown optimizer {cfg.name!r}")
+    opt = with_grad_clip(opt, grad_clip)
     if compression:
         opt = compressed_sync(opt, compression,
                               block=getattr(cfg, "compression_block", 256),

@@ -58,8 +58,21 @@ OPT_FLAGS = dict(attn_tp_pad=True, attn_remat=True, fused_xent=True,
 
 def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool,
                 opt_name: str = "local_adaalter", H: int = 4,
-                verbose: bool = True, optimized: bool = False) -> Dict[str, Any]:
-    """Lower+compile one (arch, shape, mesh); return the roofline record(s)."""
+                compression: str = "", verbose: bool = True,
+                optimized: bool = False) -> Dict[str, Any]:
+    """Lower+compile one (arch, shape, mesh); return the roofline record(s).
+
+    ``compression`` selects the sync wire codec. The compiled sync_step then
+    contains the codec's encode/decode (its FLOP/memory cost is measured),
+    but the in-process simulation all-reduces the *decoded* payload — the
+    HLO collective bytes stay at master-dtype size. Each train record
+    therefore carries ``modeled_sync_payload_bytes`` (what a codec-aware
+    collective would move) next to the measured ``collective_bytes_per_chip``
+    so the modeled-vs-measured sync volume can be compared per compiled step
+    (ROADMAP item): e.g. biglstm/train_4k sync_step measures ~1.7e10 B/chip
+    while int8 models ~1.7e9 — the 10x gap is the future fused
+    quantize-into-collective kernel's headroom.
+    """
     cfg = get_arch(arch)
     if optimized:
         cfg = dataclasses.replace(cfg, **OPT_FLAGS)
@@ -71,7 +84,7 @@ def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool,
     records = []
 
     if shape.kind == "train":
-        opt_cfg = OptimizerConfig(name=opt_name, H=H)
+        opt_cfg = OptimizerConfig(name=opt_name, H=H, compression=compression)
         plan = resolve_plan(cfg, mesh, optimizer=opt_name)
         # remat="save_tp" was tried and REFUTED on qwen2-7b (§Perf iter 3):
         # -1.0s collective, +6.9s memory. But remat="full" for small
@@ -85,6 +98,9 @@ def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool,
             params, opt_state = _abstract(abstract[0]), _abstract(abstract[1])
             batch = train_batch_specs(
                 cfg, shape, programs.n_workers if programs.is_local else 0)
+            from repro.core.comm import sync_payload_bytes
+            from repro.models.counting import count_params
+            n_params = count_params(cfg)
             variants = [("local_step", programs.local_step)]
             if programs.is_local:
                 variants.append(("sync_step", programs.sync_step))
@@ -95,9 +111,18 @@ def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool,
                               mesh_name=mesh_name, n_chips=n_chips,
                               model_flops_total=model_flops(cfg, shape))
                 rec = rep.to_dict()
+                # codec-modeled per-worker sync payload for THIS variant, to
+                # compare against the measured HLO collective bytes above
+                modeled = (sync_payload_bytes(
+                               opt_name, n_params,
+                               compression=opt_cfg.compression,
+                               block=opt_cfg.compression_block)
+                           if vname == "sync_step" else 0.0)
                 rec.update(variant=vname, plan=dataclasses.asdict(plan),
                            n_workers=programs.n_workers, H=programs.H,
                            optimizer=opt_name,
+                           compression=opt_cfg.compression,
+                           modeled_sync_payload_bytes=modeled,
                            memory_analysis=str(compiled.memory_analysis()),
                            compile_s=round(time.time() - t0, 1))
                 records.append(rec)
@@ -146,6 +171,13 @@ def main() -> None:
     ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
     ap.add_argument("--optimizer", default="local_adaalter")
     ap.add_argument("--H", type=int, default=4)
+    from repro.core.codecs import CODEC_NAMES
+    ap.add_argument("--compress", nargs="?", const="int8", default="",
+                    choices=["", *CODEC_NAMES], metavar="SCHEME",
+                    help="sync wire codec — adds the codec's encode/decode "
+                         "to the compiled sync_step and records its "
+                         "modeled_sync_payload_bytes next to the measured "
+                         "HLO collective bytes")
     ap.add_argument("--out", default="", help="directory for per-pair JSON records")
     ap.add_argument("--optimized", action="store_true",
                     help="apply the beyond-paper perf flags (§Perf '+opt')")
@@ -165,6 +197,7 @@ def main() -> None:
                 try:
                     result = dryrun_pair(arch, shape_name, multi_pod=multi_pod,
                                          opt_name=args.optimizer, H=args.H,
+                                         compression=args.compress,
                                          optimized=args.optimized)
                     n_ok += 1
                     if args.out:

@@ -11,11 +11,19 @@ Training with a *local* optimizer (the paper's Algorithms 2/4):
     charges 2/H per step for.
   The two variants are compiled separately (static ``do_sync``) so the
   dry-run can attribute collective bytes to each and report the amortized
-  ``local + sync/H`` volume exactly.
-  With ``OptimizerConfig.compression='int8'`` the sync payload is quantized
-  (per-block int8 + fp32 scales, error feedback) by the ``compressed_sync``
-  wrapper inside ``opt.sync`` — only the sync_step changes; local steps stay
-  communication-free and untouched.
+  ``local + sync/H`` volume exactly. *Which* variant runs each step is the
+  host-side ``SyncPolicy``'s call (``core/sync_policy.py``): to feed the
+  adaptive (CADA-style) policy — and only when it is configured — the local
+  train steps additionally emit ``metrics['drift']``: the per-worker
+  parameter movement of the step relative to the parameter norm, reduced to
+  one scalar. The statistic is
+  computed from arrays the update already touched and reduces each worker
+  to a scalar *before* the (R,)-sized cross-worker mean, so the skipped
+  rounds stay communication-free in any meaningful sense.
+  With ``OptimizerConfig.compression`` set ('int8', 'bf16') the sync payload
+  rides the corresponding ``WireCodec`` (``core/codecs.py``; error feedback)
+  via the ``compressed_sync`` wrapper inside ``opt.sync`` — only the
+  sync_step changes; local steps stay untouched.
 
 Training with a synchronous optimizer (Alg. 1/3, or models too large for
 per-worker replicas): classic data-parallel/FSDP — gradients are implicitly
@@ -70,6 +78,22 @@ def _mean_over_workers(tree):
     return jax.tree_util.tree_map(
         lambda x: jnp.broadcast_to(jnp.mean(x, axis=0, keepdims=True), x.shape),
         tree)
+
+
+def _drift_stat(new_params, params):
+    """Per-worker parameter drift of one local step, as a single scalar.
+
+    mean over workers of ||x_i' − x_i|| / (||x_i|| + tiny), every leaf
+    carrying a leading worker axis. Each worker reduces to a scalar before
+    any cross-worker op, so the only collective this adds is over an
+    (R,)-sized vector — the adaptive sync policy accumulates it host-side.
+    """
+    delta = jax.tree_util.tree_map(
+        lambda n, p: n.astype(jnp.float32) - p.astype(jnp.float32),
+        new_params, params)
+    d = opt_lib.global_norm(delta, batch_ndim=1)
+    p = opt_lib.global_norm(params, batch_ndim=1)
+    return jnp.mean(d / (p + 1e-12))
 
 
 @dataclasses.dataclass
@@ -153,6 +177,11 @@ def build_train_programs(cfg: ModelConfig, shape: ShapeConfig,
             loss, metrics, grads = vworker(params, batch)
             if opt_cfg.use_pallas and opt_cfg.name == "local_adaalter":
                 from repro.kernels.ops import tree_fused_update
+                # the fused kernel bypasses opt.local_step, so the grad_clip
+                # wrapper never sees these grads — clip per worker here
+                if opt_cfg.grad_clip > 0:
+                    grads, _ = opt_lib.clip_by_global_norm(
+                        grads, opt_cfg.grad_clip, batch_ndim=1)
                 step_no = opt_state["step"] + 1
                 tprime = opt_state["tprime"] + 1
                 eta = opt_lib.warmup_lr(opt_cfg.lr, step_no[0], opt_cfg.warmup_steps)
@@ -166,11 +195,17 @@ def build_train_programs(cfg: ModelConfig, shape: ShapeConfig,
                              "b2_local": new_b2}
             else:
                 new_params, new_state = vlocal(grads, opt_state, params)
+            out_metrics = {"loss": jnp.mean(loss),
+                           **{k: jnp.mean(v) for k, v in metrics.items()}}
+            # divergence stat for the adaptive sync policy, measured on the
+            # pre-averaging local update (the movement that causes drift);
+            # fixed_h never reads it, so don't make its hot loop pay the
+            # two extra full-parameter reductions
+            if getattr(opt_cfg, "sync_policy", "fixed_h") == "adaptive":
+                out_metrics["drift"] = _drift_stat(new_params, params)
             if do_sync:
                 new_params, new_state = opt.sync(new_params, new_state,
                                                  _mean_over_workers)
-            out_metrics = {"loss": jnp.mean(loss),
-                           **{k: jnp.mean(v) for k, v in metrics.items()}}
             return new_params, new_state, out_metrics
     else:
         def step(params, opt_state, batch, *, do_sync: bool):

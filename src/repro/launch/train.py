@@ -2,10 +2,24 @@
 
 Trains any architecture config (typically a ``--reduced`` variant on CPU)
 with any of the paper's optimizers on the synthetic non-IID LM stream,
-logging loss/PPL and the communication volume each algorithm would move.
+logging loss/PPL and the communication volume each algorithm actually moved.
+
+The sync schedule is owned by a host-side ``SyncPolicy``
+(``core/sync_policy.py``): ``--sync-policy fixed_h`` is the paper's
+every-H-steps schedule (bit-identical to the historical modulo loop,
+including across checkpoint restores), ``--sync-policy adaptive`` triggers
+the sync round on the accumulated parameter drift the compiled steps emit
+(CADA-style), bounded by ``--h-min``/``--h-max``. The sync wire format is a
+``WireCodec`` (``core/codecs.py``): ``--compress bf16`` halves the payload,
+``--compress int8`` shrinks it ~4x with error feedback. ``TrainResult``
+reports the *measured* sync count/steps and the comm bytes they moved, not
+the static ``2P/H`` formula.
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --reduced \
       --optimizer local_adaalter --H 4 --steps 200 --batch 16 --seq 128
+  PYTHONPATH=src python -m repro.launch.train --arch biglstm --reduced \
+      --optimizer local_adaalter --sync-policy adaptive --sync-threshold \
+      0.05 --h-min 2 --h-max 16 --compress bf16 --steps 200
 """
 from __future__ import annotations
 
@@ -23,7 +37,10 @@ import numpy as np
 from repro.configs import (ARCHS, OptimizerConfig, ShapeConfig, get_arch,
                            get_shape, reduced)
 from repro.configs.base import ModelConfig, ParallelismPlan, TrainConfig
-from repro.core.comm import sync_bytes_per_step
+from repro.core.codecs import CODEC_NAMES
+from repro.core.comm import (payload_bytes, sync_bytes_per_step,
+                             sync_payload_bytes)
+from repro.core.sync_policy import POLICY_NAMES, make_sync_policy
 from repro.data import SyntheticLM, make_train_batch
 from repro.launch.mesh import resolve_plan
 from repro.launch.steps import build_train_programs
@@ -51,10 +68,17 @@ class TrainResult:
     ppl: List[float]
     steps: int                             # steps executed THIS run
     n_workers: int
-    comm_bytes_per_step: float
+    comm_bytes_per_step: float             # MEASURED: moved bytes / steps run
     wall_s: float
     final_loss: float
     start_step: int = 0                    # checkpoint-restore point (0 = fresh)
+    sync_count: int = 0                    # sync rounds the policy triggered
+    sync_steps: List[int] = dataclasses.field(default_factory=list)
+    comm_bytes_total: float = 0.0          # measured wire bytes, WHOLE run
+    comm_bytes_modeled: float = 0.0        # static fixed-H formula, PER STEP
+                                           # (compare with comm_bytes_per_step,
+                                           # not comm_bytes_total)
+    sync_policy: str = "fixed_h"
 
 
 def train_loop(cfg: ModelConfig, shape: ShapeConfig, opt_cfg: OptimizerConfig,
@@ -81,17 +105,24 @@ def train_loop(cfg: ModelConfig, shape: ShapeConfig, opt_cfg: OptimizerConfig,
                 if verbose:
                     print(f"restored checkpoint at step {start_step}")
 
-        H = programs.H if programs.is_local else 1
+        # The sync schedule is the policy's call, consulted host-side between
+        # the two compiled step programs (core/sync_policy.py). fixed_h
+        # reproduces the historical `(step+1) % H` modulo bit-identically.
+        policy = make_sync_policy(opt_cfg, is_local=programs.is_local,
+                                  H=programs.H if programs.is_local else 1)
+        policy.reset(start_step)
         losses, ppls = [], []
         t0 = time.time()
         for step in range(start_step, steps):
             batch_np = make_train_batch(cfg, shape, ds, step,
                                         n_workers=R if programs.is_local else 0)
             batch = jax.tree_util.tree_map(jnp.asarray, batch_np)
-            do_sync = ((step + 1) % H == 0)
+            do_sync = policy.want_sync(step)
             fn = programs.sync_step if do_sync else programs.local_step
             params, opt_state, metrics = fn(params, opt_state, batch)
             loss = float(metrics["loss"])
+            policy.observe(step, do_sync,
+                           {"drift": float(metrics.get("drift", 0.0))})
             losses.append(loss)
             ppls.append(math.exp(min(loss, 30.0)))
             if verbose and (step % log_every == 0 or step == steps - 1):
@@ -104,18 +135,43 @@ def train_loop(cfg: ModelConfig, shape: ShapeConfig, opt_cfg: OptimizerConfig,
 
         wall = time.time() - t0
         n_params = count_params(cfg)
-        comm = sync_bytes_per_step(opt_cfg.name, n_params, opt_cfg.H,
-                                   compression=opt_cfg.compression,
-                                   block=opt_cfg.compression_block)
+        executed = max(steps - start_step, 0)
+        # Measured comm: what the schedule that actually ran moved — the
+        # policy's sync count times the per-round codec payload (for local
+        # optimizers; synchronous ones all-reduce a gradient every step).
+        # The static 2P/H formula is kept alongside as `comm_bytes_modeled`;
+        # the two diverge under the adaptive policy and after a restore into
+        # the middle of an H-window.
+        if programs.is_local:
+            total = policy.sync_count * sync_payload_bytes(
+                opt_cfg.name, n_params, compression=opt_cfg.compression,
+                block=opt_cfg.compression_block)
+            modeled = sync_bytes_per_step(opt_cfg.name, n_params, opt_cfg.H,
+                                          compression=opt_cfg.compression,
+                                          block=opt_cfg.compression_block)
+        else:
+            # Synchronous execution (incl. a LocalOptimizer forced onto a
+            # sync-only plan, where `sync` runs every step with an identity
+            # mean): the only wire traffic is GSPMD's per-step gradient
+            # all-reduce — P bytes, untouched by H or the sync codec — so
+            # both numbers report that, not the inapplicable 2P/H formula.
+            total = executed * payload_bytes(n_params)
+            modeled = payload_bytes(n_params)
         # After a restore only the post-restore losses exist: report the
         # steps actually executed and guard the empty-run case (restore at or
         # past the target used to yield steps=target and a NaN-mean warning).
         final = float(np.mean(losses[-10:])) if losses else float("nan")
-        return TrainResult(losses=losses, ppl=ppls,
-                           steps=max(steps - start_step, 0),
-                           n_workers=R, comm_bytes_per_step=comm,
+        return TrainResult(losses=losses, ppl=ppls, steps=executed,
+                           n_workers=R,
+                           comm_bytes_per_step=total / executed if executed
+                           else 0.0,
                            wall_s=wall, final_loss=final,
-                           start_step=start_step)
+                           start_step=start_step,
+                           sync_count=policy.sync_count,
+                           sync_steps=list(policy.sync_steps),
+                           comm_bytes_total=total,
+                           comm_bytes_modeled=modeled,
+                           sync_policy=policy.name)
 
 
 def main() -> None:
@@ -135,9 +191,25 @@ def main() -> None:
     ap.add_argument("--vocab", type=int, default=512)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--compress", nargs="?", const="int8", default="",
-                    choices=["", "int8"], metavar="SCHEME",
-                    help="quantize the sync payload (local optimizers); "
-                         "bare --compress means int8 + error feedback")
+                    choices=["", *CODEC_NAMES], metavar="SCHEME",
+                    help="sync wire codec (local optimizers): 'bf16' halves "
+                         "the payload, 'int8' shrinks it ~4x (per-block "
+                         "int8 + fp32 scales); both get error feedback. "
+                         "Bare --compress means int8")
+    ap.add_argument("--sync-policy", default="fixed_h", choices=POLICY_NAMES,
+                    help="'fixed_h': the paper's every-H-steps schedule; "
+                         "'adaptive': CADA-style — sync when the accumulated "
+                         "parameter drift since the last sync crosses "
+                         "--sync-threshold, no sooner than --h-min steps, "
+                         "no later than --h-max")
+    ap.add_argument("--sync-threshold", type=float, default=0.05,
+                    help="adaptive trigger on the accumulated per-step "
+                         "relative parameter drift (metrics['drift'])")
+    ap.add_argument("--h-min", type=int, default=1,
+                    help="adaptive: minimum local steps between syncs")
+    ap.add_argument("--h-max", type=int, default=0,
+                    help="adaptive: maximum local steps between syncs "
+                         "(0 -> 4*H)")
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--iid", action="store_true", help="disable non-IID workers")
@@ -151,17 +223,24 @@ def main() -> None:
                         kind="train")
     opt_cfg = OptimizerConfig(name=args.optimizer, lr=args.lr, H=args.H,
                               warmup_steps=args.warmup,
-                              compression=args.compress)
+                              compression=args.compress,
+                              sync_policy=args.sync_policy,
+                              sync_threshold=args.sync_threshold,
+                              h_min=args.h_min, h_max=args.h_max)
+    sched = (f"H={args.H}" if args.sync_policy == "fixed_h" else
+             f"adaptive(thr={args.sync_threshold}, "
+             f"h=[{args.h_min},{args.h_max or 4 * args.H}])")
     print(f"training {cfg.name} ({count_params(cfg):,} params) with "
-          f"{args.optimizer} H={args.H}"
+          f"{args.optimizer} {sched}"
           f"{' +' + args.compress + ' sync' if args.compress else ''} "
           f"on {jax.device_count()} device(s)")
     res = train_loop(cfg, shape, opt_cfg, steps=args.steps, seed=args.seed,
                      non_iid=not args.iid, checkpoint_dir=args.checkpoint_dir,
                      checkpoint_every=args.checkpoint_every)
     print(f"done in {res.wall_s:.1f}s; final loss {res.final_loss:.4f}; "
-          f"avg comm/step {res.comm_bytes_per_step / 1e6:.1f} MB "
-          f"({res.n_workers} workers)")
+          f"{res.sync_count} syncs in {res.steps} steps; measured comm/step "
+          f"{res.comm_bytes_per_step / 1e6:.1f} MB (modeled "
+          f"{res.comm_bytes_modeled / 1e6:.1f} MB; {res.n_workers} workers)")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(dataclasses.asdict(res), f, indent=1)

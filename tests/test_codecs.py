@@ -1,0 +1,156 @@
+"""Wire codecs: bf16/fp32 numerics, accounting, error feedback (mirrors the
+int8 coverage in tests/test_quantize.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import OptimizerConfig
+from repro.core import optimizers as opt
+from repro.core.codecs import CODEC_NAMES, get_codec
+from repro.core.comm import (payload_bytes, sync_bytes_per_step,
+                             sync_payload_bytes)
+
+BF16_REL = 2.0 ** -8           # half-ulp relative error of a bf16 truncation
+
+
+# --------------------------------------------------------------------------- #
+# codec protocol
+# --------------------------------------------------------------------------- #
+def test_codec_registry():
+    assert get_codec("").name == "fp32"
+    for name in CODEC_NAMES:
+        c = get_codec(name)
+        assert c.name == name
+        assert c.lossless == (name == "fp32")
+    c = get_codec("int8")
+    assert get_codec(c) is c                      # WireCodec passes through
+    with pytest.raises(ValueError, match="compression"):
+        get_codec("fp4")
+
+
+def test_fp32_codec_is_identity():
+    c = get_codec("fp32")
+    x = jax.random.normal(jax.random.PRNGKey(0), (300,))
+    np.testing.assert_array_equal(np.asarray(c.roundtrip(x)), np.asarray(x))
+    assert c.wire_bytes(256, 4) == 1024.0
+
+
+@pytest.mark.parametrize("shape", [(100,), (4, 1000), (2, 3, 130)])
+def test_bf16_roundtrip_error_bounded(shape):
+    x = jax.random.normal(jax.random.PRNGKey(1), shape, jnp.float32)
+    c = get_codec("bf16")
+    y = c.roundtrip(x, batch_ndim=1 if len(shape) > 1 else 0)
+    assert y.dtype == jnp.float32
+    rel = np.abs(np.asarray(y) - np.asarray(x)) / np.abs(np.asarray(x))
+    assert rel.max() <= BF16_REL * 1.01
+    # encode actually puts bf16 on the wire
+    assert c.encode(x, 0).dtype == jnp.bfloat16
+
+
+def test_codec_wire_bytes():
+    assert get_codec("bf16").wire_bytes(256, 4) == 512.0
+    assert get_codec("int8").wire_bytes(256, 4) == 260.0
+    # comm accounting dispatches through the codec
+    assert payload_bytes(256, compression="bf16") == 512.0
+    assert payload_bytes(256, compression="fp32") == 1024.0
+
+
+def test_sync_bytes_bf16_halves_payload():
+    P, H = 10_000_000, 4
+    full = sync_bytes_per_step("local_adaalter", P, H)
+    half = sync_bytes_per_step("local_adaalter", P, H, compression="bf16")
+    assert full / half == pytest.approx(2.0)
+    assert sync_payload_bytes("local_adaalter", P) == pytest.approx(8.0 * P)
+    assert sync_payload_bytes("local_sgd", P, compression="bf16") \
+        == pytest.approx(2.0 * P)
+
+
+# --------------------------------------------------------------------------- #
+# compressed_sync over the bf16 codec (mirrors the int8 tests)
+# --------------------------------------------------------------------------- #
+def test_fp32_codec_returns_base():
+    base = opt.local_adaalter(H=4)
+    assert opt.compressed_sync(base, "fp32") is base
+    o = opt.make_optimizer(OptimizerConfig(name="local_adaalter",
+                                           compression="fp32"))
+    assert "res_params" not in o.init({"w": jnp.zeros(4)})
+
+
+def test_bf16_residual_is_exact_truncation_error():
+    """After a sync, wire + residual must reconstruct params + old residual."""
+    o = opt.make_optimizer(OptimizerConfig(
+        name="local_adaalter", lr=0.3, H=1, warmup_steps=0,
+        compression="bf16"))
+    params = {"w": jnp.asarray(np.random.default_rng(0).normal(size=500),
+                               jnp.float32)}
+    state = o.init(params)
+    g = {"w": jnp.asarray(np.random.default_rng(1).normal(size=500) * 0.1,
+                          jnp.float32)}
+    params, state = o.local_step(g, state, params)
+    pre_sync = np.asarray(params["w"]).copy()
+    synced, state = o.sync(params, state)       # identity mean_fn (1 worker)
+    np.testing.assert_allclose(
+        np.asarray(synced["w"]) + np.asarray(state["res_params"]["w"]),
+        pre_sync, rtol=0, atol=1e-6)
+    # residuals bounded by half a bf16 ulp of the payload
+    res = np.abs(np.asarray(state["res_params"]["w"]))
+    assert res.max() <= np.abs(pre_sync).max() * BF16_REL * 1.01
+
+
+def test_bf16_local_step_matches_base():
+    o = opt.make_optimizer(OptimizerConfig(
+        name="local_adaalter", lr=0.3, H=4, warmup_steps=0,
+        compression="bf16"))
+    base = opt.local_adaalter(lr=0.3, H=4, warmup_steps=0)
+    params = {"w": jnp.ones(300)}
+    s, sb = o.init(params), base.init(params)
+    g = {"w": jnp.full(300, 0.1)}
+    (p1, s1), (p2, s2) = o.local_step(g, s, params), base.local_step(g, sb, params)
+    np.testing.assert_array_equal(np.asarray(p1["w"]), np.asarray(p2["w"]))
+    np.testing.assert_array_equal(np.asarray(s1["b2_local"]["w"]),
+                                  np.asarray(s2["b2_local"]["w"]))
+
+
+def test_bf16_b2_sync_stays_nonnegative():
+    o = opt.make_optimizer(OptimizerConfig(
+        name="local_adaalter", lr=0.3, H=1, warmup_steps=0,
+        compression="bf16", b0=0.01))
+    params = {"w": jnp.linspace(-1.0, 1.0, 512)}
+    state = o.init(params)
+    for t in range(3):
+        g = {"w": jnp.sin(jnp.arange(512.0) + t) * 0.01}
+        params, state = o.local_step(g, state, params)
+        params, state = o.sync(params, state)
+    assert float(jnp.min(state["b2_sync"]["w"])) >= 0.0
+
+
+def test_bf16_convergence_tracks_uncompressed():
+    """Toy non-IID quadratic, 2 workers: bf16+EF within 10% of fp32 sync."""
+    n, d, H, T = 2, 512, 4, 64
+    target = np.random.default_rng(0).normal(size=d).astype(np.float32)
+
+    def mean_fn(tree):
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(jnp.mean(x, axis=0, keepdims=True),
+                                       x.shape), tree)
+
+    def run(compression):
+        o = opt.make_optimizer(OptimizerConfig(
+            name="local_adaalter", lr=0.3, H=H, warmup_steps=0,
+            compression=compression))
+        params = {"w": jnp.zeros((n, d), jnp.float32)}
+        state = jax.vmap(o.init)(params)
+        vstep = jax.vmap(o.local_step)
+        rng = np.random.default_rng(1)
+        for t in range(1, T + 1):
+            g = (np.asarray(params["w"]) - target[None]
+                 + rng.normal(size=(n, d)) * 0.1)
+            params, state = vstep({"w": jnp.asarray(g, jnp.float32)},
+                                  state, params)
+            if t % H == 0:
+                params, state = o.sync(params, state, mean_fn)
+        return float(np.mean((np.asarray(params["w"]) - target[None]) ** 2))
+
+    l_fp32, l_bf16 = run(""), run("bf16")
+    assert l_bf16 < l_fp32 * 1.1 + 1e-4, (l_fp32, l_bf16)
