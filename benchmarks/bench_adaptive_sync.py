@@ -1,8 +1,10 @@
 """Adaptive (CADA-style) sync policy vs the paper's fixed H=4 schedule.
 
-Trains Local AdaAlter twice on the same synthetic non-IID stream — once with
-``sync_policy='fixed_h'`` (H=4), once with ``sync_policy='adaptive'``
-(divergence-triggered, bounded by h_min/h_max) — and reports, per run:
+Trains Local AdaAlter on the same synthetic non-IID stream with
+``sync_policy='fixed_h'`` (H=4) and with ``sync_policy='adaptive'`` under
+both drift metrics — ``update_norm`` (relative per-step parameter movement)
+and ``grad_staleness`` (CADA-proper ‖g_t − g_last_sync‖², relative) — and
+reports, per run:
 
   sync_count               MEASURED syncs the policy triggered (from
                            ``TrainResult``, not the 2P/H formula);
@@ -31,6 +33,7 @@ from repro.launch.train import train_loop
 
 def run(steps: int = 120, seq: int = 64, batch: int = 8,
         threshold: float = 0.005, h_min: int = 4, h_max: int = 16,
+        staleness_threshold: float = 8.0,
         compression: str = "") -> List[Dict]:
     cfg = reduced(get_arch("biglstm"), vocab=512)
     shape = ShapeConfig(name="bench", seq_len=seq, global_batch=batch,
@@ -39,14 +42,23 @@ def run(steps: int = 120, seq: int = 64, batch: int = 8,
                   compression=compression)
     variants = {
         "fixed_h(H=4)": OptimizerConfig(**common),
-        f"adaptive(thr={threshold},h=[{h_min},{h_max}])": OptimizerConfig(
-            **common, sync_policy="adaptive", sync_threshold=threshold,
-            h_min=h_min, h_max=h_max),
+        f"adaptive(update_norm,thr={threshold},h=[{h_min},{h_max}])":
+            OptimizerConfig(**common, sync_policy="adaptive",
+                            sync_threshold=threshold,
+                            h_min=h_min, h_max=h_max),
+        f"adaptive(grad_staleness,thr={staleness_threshold},"
+        f"h=[{h_min},{h_max}])":
+            OptimizerConfig(**common, sync_policy="adaptive",
+                            sync_threshold=staleness_threshold,
+                            drift_metric="grad_staleness",
+                            h_min=h_min, h_max=h_max),
     }
     rows, results = [], {}
     for method, opt_cfg in variants.items():
         res = train_loop(cfg, shape, opt_cfg, steps=steps, verbose=False)
-        results[opt_cfg.sync_policy] = res
+        key = (opt_cfg.sync.drift_metric
+               if opt_cfg.sync_policy == "adaptive" else "fixed_h")
+        results[key] = res
         gaps = [b - a for a, b in zip([-1] + res.sync_steps, res.sync_steps)]
         rows.append({
             "bench": "adaptive_sync",
@@ -62,19 +74,33 @@ def run(steps: int = 120, seq: int = 64, batch: int = 8,
                 res.comm_bytes_modeled / 1e6, 3),
             "final_loss": round(res.final_loss, 4),
         })
-    fixed, adapt = results["fixed_h"], results["adaptive"]
-    delta = (abs(adapt.final_loss - fixed.final_loss)
-             / max(abs(fixed.final_loss), 1e-9))
+    fixed = results["fixed_h"]
+    for metric in ("update_norm", "grad_staleness"):
+        adapt = results[metric]
+        delta = (abs(adapt.final_loss - fixed.final_loss)
+                 / max(abs(fixed.final_loss), 1e-9))
+        rows.append({
+            "bench": "adaptive_sync(summary)",
+            "method": f"adaptive({metric})_vs_fixed",
+            "sync_reduction": round(fixed.sync_count
+                                    / max(adapt.sync_count, 1), 2),
+            "comm_reduction": round(
+                fixed.comm_bytes_per_step
+                / max(adapt.comm_bytes_per_step, 1e-9), 2),
+            "loss_delta_frac": round(delta, 4),
+            "fewer_syncs": adapt.sync_count < fixed.sync_count,
+            "loss_within_1pct": delta < 0.01,
+        })
+    # the two drift statistics head-to-head on the same stream
+    un, gs = results["update_norm"], results["grad_staleness"]
     rows.append({
-        "bench": "adaptive_sync(summary)",
-        "method": "adaptive_vs_fixed",
-        "sync_reduction": round(fixed.sync_count
-                                / max(adapt.sync_count, 1), 2),
-        "comm_reduction": round(fixed.comm_bytes_per_step
-                                / max(adapt.comm_bytes_per_step, 1e-9), 2),
-        "loss_delta_frac": round(delta, 4),
-        "fewer_syncs": adapt.sync_count < fixed.sync_count,
-        "loss_within_1pct": delta < 0.01,
+        "bench": "adaptive_sync(drift_metric_comparison)",
+        "method": "update_norm_vs_grad_staleness",
+        "sync_count_update_norm": un.sync_count,
+        "sync_count_grad_staleness": gs.sync_count,
+        "final_loss_update_norm": round(un.final_loss, 4),
+        "final_loss_grad_staleness": round(gs.final_loss, 4),
+        "schedules_differ": un.sync_steps != gs.sync_steps,
     })
     return rows
 
@@ -83,6 +109,10 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--steps", type=int, default=120)
     ap.add_argument("--threshold", type=float, default=0.005)
+    ap.add_argument("--staleness-threshold", type=float, default=8.0,
+                    help="adaptive trigger for drift_metric=grad_staleness "
+                         "(the statistic is O(1)/step, vs O(0.001) for "
+                         "update_norm, so its scale differs)")
     ap.add_argument("--h-min", type=int, default=4)
     ap.add_argument("--h-max", type=int, default=16)
     ap.add_argument("--compress", nargs="?", const="int8", default="",
@@ -90,7 +120,9 @@ def main() -> None:
     ap.add_argument("--out", default="", help="write rows as JSON here")
     args = ap.parse_args()
     rows = run(steps=args.steps, threshold=args.threshold, h_min=args.h_min,
-               h_max=args.h_max, compression=args.compress)
+               h_max=args.h_max,
+               staleness_threshold=args.staleness_threshold,
+               compression=args.compress)
     for r in rows:
         print(r)
     if args.out:

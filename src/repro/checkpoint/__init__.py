@@ -1,4 +1,6 @@
 """Sharding-aware checkpointing (npz payload + JSON pytree manifest)."""
-from repro.checkpoint.store import save_checkpoint, restore_checkpoint, latest_step
+from repro.checkpoint.store import (checkpoint_keys, latest_step,
+                                    restore_checkpoint, save_checkpoint)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = ["checkpoint_keys", "latest_step", "restore_checkpoint",
+           "save_checkpoint"]

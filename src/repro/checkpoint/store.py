@@ -38,6 +38,8 @@ def _flatten(tree: Any):
 def _path_part(p) -> str:
     if hasattr(p, "key"):
         return str(p.key)
+    if hasattr(p, "name"):        # GetAttrKey: registered dataclasses
+        return str(p.name)        # (e.g. core.sync_engine.SyncState)
     if hasattr(p, "idx"):
         return f"#{p.idx}"
     return str(p)
@@ -83,6 +85,21 @@ def latest_step(directory: str) -> Optional[int]:
     steps = [int(m.group(1)) for d in os.listdir(directory)
              if (m := _STEP_RE.match(d))]
     return max(steps) if steps else None
+
+
+def checkpoint_keys(directory: str, *, step: Optional[int] = None
+                    ) -> Tuple[str, ...]:
+    """Flat leaf keys of a saved checkpoint (from its manifest), without
+    loading the arrays — lets callers pick a restore template matching the
+    on-disk structure (e.g. checkpoints predating a new state leaf) instead
+    of probing with mismatching restores."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory!r}")
+    path = os.path.join(directory, f"step_{step}", "manifest.json")
+    with open(path) as f:
+        return tuple(json.load(f)["keys"])
 
 
 def restore_checkpoint(directory: str, like: Any, *, step: Optional[int] = None,

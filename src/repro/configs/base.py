@@ -121,8 +121,52 @@ class ShapeConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class SyncConfig:
+    """Everything about the sync round, in one block (core/sync_engine.py).
+
+    The *when* (policy), the *what* (wire codec), and the *how* (fused vs
+    three-pass error-feedback encode) of the communication rounds that the
+    paper's whole contribution is about making cheaper.
+    """
+
+    # --- schedule (core/sync_policy.py; local optimizers) ---
+    # 'fixed_h'  -> the paper's every-H-steps schedule (bit-identical);
+    # 'adaptive' -> CADA-style: sync once the accumulated drift statistic
+    #               since the last sync crosses threshold, never before
+    #               h_min local steps, always by h_max (0 -> 4·H).
+    policy: str = "fixed_h"
+    threshold: float = 0.0                 # accumulated drift trigger
+    h_min: int = 1                         # adaptive lower bound on the period
+    h_max: int = 0                         # adaptive upper bound; 0 -> 4·H
+    # which divergence statistic the compiled steps emit for 'adaptive':
+    # 'update_norm'     per-step relative parameter movement (cheap: reuses
+    #                   arrays the update already touched);
+    # 'grad_staleness'  CADA-proper ‖g_t − g_last_sync‖² (relative to ‖g_t‖²;
+    #                   costs one extra param-sized anchor buffer per worker).
+    drift_metric: str = "update_norm"
+    # --- wire codec (core/codecs.py; local optimizers only) ---
+    # ''/'fp32' -> fp32 payload (paper), 'bf16' -> 2x truncation,
+    # 'int8' -> per-block int8 + fp32 scales (~4x less); lossy codecs get
+    # error feedback from the engine's encode.
+    compression: str = ""
+    block: int = 256                       # elements per quantization block
+    # one-HBM-pass fused EF+quantize+dequantize+residual kernel
+    # (kernels/sync_fused.py) instead of the three-pass composition; bitwise
+    # identical, so this is purely a bandwidth knob.
+    fused: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
 class OptimizerConfig:
-    """Paper algorithms 1-4 plus plain SGD."""
+    """Paper algorithms 1-4 plus plain SGD.
+
+    Everything about the sync round is consumed through the
+    :class:`SyncConfig` view (``cfg.sync``) — one block for the policy, the
+    wire codec, the drift metric and the fused-encode knob. The flat field
+    names below are the storage (and the back-compat constructor/attribute
+    aliases, so pre-SyncConfig call sites and ``dataclasses.replace`` work
+    unchanged); :meth:`from_sync` constructs from an explicit block.
+    """
 
     name: str = "local_adaalter"           # 'sgd'|'adagrad'|'adaalter'|'local_sgd'|'local_adaalter'
     lr: float = 0.5                        # paper default (8 workers x bs 256)
@@ -132,21 +176,45 @@ class OptimizerConfig:
     warmup_steps: int = 600                # paper: 600
     grad_clip: float = 0.0                 # global-norm clip; 0 -> off
     use_pallas: bool = False               # fused Pallas update kernel
-    # --- sync schedule (core/sync_policy.py; local optimizers) ---
-    # 'fixed_h'  -> the paper's every-H-steps schedule (bit-identical);
-    # 'adaptive' -> CADA-style: sync once the accumulated parameter drift
-    #               since the last sync crosses sync_threshold, never before
-    #               h_min local steps, always by h_max (0 -> 4·H).
+    # --- flat aliases of the SyncConfig block (read ``cfg.sync`` instead) ---
     sync_policy: str = "fixed_h"
-    sync_threshold: float = 0.0            # accumulated relative drift trigger
-    h_min: int = 1                         # adaptive lower bound on the period
-    h_max: int = 0                         # adaptive upper bound; 0 -> 4·H
-    # --- sync wire codec (core/codecs.py; local optimizers only) ---
-    # ''/'fp32' -> fp32 payload (paper), 'bf16' -> 2x truncation,
-    # 'int8' -> per-block int8 + fp32 scales (~4x less); lossy codecs get
-    # error feedback from compressed_sync.
+    sync_threshold: float = 0.0
+    h_min: int = 1
+    h_max: int = 0
+    drift_metric: str = "update_norm"
     compression: str = ""
-    compression_block: int = 256           # elements per quantization block
+    compression_block: int = 256
+    sync_fused: bool = True
+
+    #: SyncConfig field -> flat OptimizerConfig alias; the one table the
+    #: sync property, from_sync and with_sync all iterate, so adding a
+    #: field to SyncConfig means touching exactly this mapping (and the
+    #: alias field above) once.
+    _SYNC_ALIASES = {
+        "policy": "sync_policy", "threshold": "sync_threshold",
+        "h_min": "h_min", "h_max": "h_max", "drift_metric": "drift_metric",
+        "compression": "compression", "block": "compression_block",
+        "fused": "sync_fused",
+    }
+
+    @property
+    def sync(self) -> SyncConfig:
+        """The sync-round configuration as one coherent block."""
+        return SyncConfig(**{k: getattr(self, alias)
+                             for k, alias in self._SYNC_ALIASES.items()})
+
+    @classmethod
+    def from_sync(cls, sync: SyncConfig, **kwargs) -> "OptimizerConfig":
+        """Construct with an explicit :class:`SyncConfig` block; ``kwargs``
+        are the non-sync fields (``name``, ``lr``, ``H``, ...)."""
+        return cls(**{alias: getattr(sync, k)
+                      for k, alias in cls._SYNC_ALIASES.items()}, **kwargs)
+
+    def with_sync(self, sync: SyncConfig) -> "OptimizerConfig":
+        """This config with its whole sync block swapped."""
+        return dataclasses.replace(
+            self, **{alias: getattr(sync, k)
+                     for k, alias in self._SYNC_ALIASES.items()})
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,7 +1,8 @@
 """The paper's primary contribution: AdaAlter / Local AdaAlter optimizers,
-their synchronous baselines, the communication accounting, and the pluggable
-sync subsystem (when to sync: ``sync_policy``; what goes on the wire:
-``codecs``)."""
+their synchronous baselines, the communication accounting, and the sync
+subsystem owned end-to-end by ``sync_engine`` (when to sync:
+``sync_policy``; what goes on the wire: ``codecs``; the fused device-side
+encode: ``kernels/sync_fused``)."""
 from repro.core.codecs import CODEC_NAMES, WireCodec, get_codec
 from repro.core.optimizers import (
     LocalOptimizer,
@@ -17,7 +18,15 @@ from repro.core.optimizers import (
     make_optimizer,
     sgd,
     warmup_lr,
+    with_grad_anchor,
     with_grad_clip,
+)
+from repro.core.sync_engine import (
+    DRIFT_METRICS,
+    SyncEngine,
+    SyncState,
+    ef_apply,
+    make_sync_engine,
 )
 from repro.core.sync_policy import (
     POLICY_NAMES,
@@ -29,25 +38,31 @@ from repro.core.sync_policy import (
 
 __all__ = [
     "CODEC_NAMES",
+    "DRIFT_METRICS",
     "POLICY_NAMES",
     "AdaptiveSyncPolicy",
     "FixedHPolicy",
     "LocalOptimizer",
     "Optimizer",
+    "SyncEngine",
     "SyncPolicy",
+    "SyncState",
     "WireCodec",
     "adaalter",
     "adagrad",
     "clip_by_global_norm",
     "compressed_sync",
+    "ef_apply",
     "get_codec",
     "global_norm",
     "is_local",
     "local_adaalter",
     "local_sgd",
     "make_optimizer",
+    "make_sync_engine",
     "make_sync_policy",
     "sgd",
     "warmup_lr",
+    "with_grad_anchor",
     "with_grad_clip",
 ]

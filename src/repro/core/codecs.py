@@ -20,7 +20,7 @@ modeled volume can never drift from the simulated wire format.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -52,6 +52,13 @@ class WireCodec:
     encode: Callable[[Any, int], Any]
     decode: Callable[[Any, Tuple[int, ...], int], Any]
     wire_bytes: Callable[[int, int], float]
+    #: optional ONE-HBM-PASS error-feedback encode
+    #: ``(x, residual, batch_ndim, clamp_nonneg) -> (wire, new_residual)``
+    #: fusing EF add + encode + decode + residual update (what the
+    #: SyncEngine uses when the codec provides it); ``None`` -> the engine
+    #: composes encode/decode in the generic three-pass way.
+    ef_roundtrip: Optional[Callable[[Any, Any, int, bool],
+                                    Tuple[Any, Any]]] = None
 
     def roundtrip(self, x, batch_ndim: int = 0):
         """decode(encode(x)) — the value the sync mean actually averages."""
@@ -78,7 +85,7 @@ def _bf16_codec() -> WireCodec:
         wire_bytes=lambda n, dtype_bytes=4: float(n * 2))
 
 
-def _int8_codec(block: int, use_pallas: bool) -> WireCodec:
+def _int8_codec(block: int, use_pallas: bool, fused: bool) -> WireCodec:
     # kernel import stays inside the closures: pure accounting callers
     # (comm.payload_bytes) resolve the codec without touching Pallas
 
@@ -94,14 +101,26 @@ def _int8_codec(block: int, use_pallas: bool) -> WireCodec:
                           batch_ndim=min(bnd, len(shape)),
                           use_pallas=use_pallas)
 
+    def ef_roundtrip(x, e, bnd, clamp_nonneg):
+        from repro.kernels.sync_fused import fused_ef_leaf
+        return fused_ef_leaf(x, e, block=block, batch_ndim=bnd,
+                             clamp_nonneg=clamp_nonneg,
+                             use_pallas=use_pallas)
+
     return WireCodec(
         name="int8", lossless=False, encode=encode, decode=decode,
-        wire_bytes=lambda n, dtype_bytes=4: n * (1.0 + 4.0 / block))
+        wire_bytes=lambda n, dtype_bytes=4: n * (1.0 + 4.0 / block),
+        ef_roundtrip=ef_roundtrip if fused else None)
 
 
-def get_codec(name: str, *, block: int = 256,
-              use_pallas: bool = False) -> WireCodec:
-    """Resolve a codec name ('', 'fp32', 'bf16', 'int8') -> WireCodec."""
+def get_codec(name: str, *, block: int = 256, use_pallas: bool = False,
+              fused: bool = True) -> WireCodec:
+    """Resolve a codec name ('', 'fp32', 'bf16', 'int8') -> WireCodec.
+
+    ``fused=False`` strips the codec's one-pass ``ef_roundtrip`` so the
+    engine falls back to the three-pass composition (bench/debug knob; the
+    two are bitwise identical).
+    """
     if isinstance(name, WireCodec):
         return name
     if name in ("", "fp32"):
@@ -109,6 +128,6 @@ def get_codec(name: str, *, block: int = 256,
     if name == "bf16":
         return _bf16_codec()
     if name == "int8":
-        return _int8_codec(block, use_pallas)
+        return _int8_codec(block, use_pallas, fused)
     raise ValueError(f"unknown compression {name!r} "
                      f"(expected one of {CODEC_NAMES})")

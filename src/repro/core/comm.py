@@ -46,6 +46,39 @@ def payload_bytes(n_values: int, dtype_bytes: int = 4, compression: str = "",
         n_values, dtype_bytes)
 
 
+def ef_sync_hbm_bytes(n_values: int, *, fused: bool, dtype_bytes: int = 4,
+                      block: int = 256) -> float:
+    """Modeled device-side HBM traffic of ONE worker's error-feedback
+    encode of an ``n_values``-element sync payload (int8 codec).
+
+    fused (kernels/sync_fused.py — one pass):
+        read  x (dtype_bytes·n) + residual (4n)
+        write wire (dtype_bytes·n) + residual' (4n)
+    unfused (the three-pass composition the fused kernel replaces):
+        pass 1  EF add:        read x + e,        write v          (fp32)
+        pass 2  quantize:      read v,            write q + scales
+        pass 3  dequantize:    read q + scales,   write v̂
+        residual update:       read v + v̂ [+ wire cast], write wire + e'
+    The int8/scales intermediates (q: n bytes, scales: 4n/block) never
+    touch HBM in the fused kernel — that and the v/v̂ round-trips are the
+    ~2.4x traffic gap (38n vs 16n bytes at fp32)
+    ``benchmarks/bench_sync_compression.py`` measures.
+    """
+    n = float(n_values)
+    d = float(dtype_bytes)
+    scales = 4.0 * n / block
+    one_pass = (d * n + 4.0 * n) + (d * n + 4.0 * n)
+    if fused:
+        return one_pass
+    q = 1.0 * n + scales
+    return (
+        (d * n + 4.0 * n) + 4.0 * n          # pass 1: read x,e  write v
+        + (4.0 * n + q)                      # pass 2: read v    write q,s
+        + (q + 4.0 * n)                      # pass 3: read q,s  write v̂
+        + (4.0 * n + 4.0 * n)                # residual: read v, v̂
+        + (d * n + 4.0 * n))                 #           write wire, e'
+
+
 def sync_round_multiplier(algorithm: str) -> float:
     """How many param-sized tensors one communication round moves.
 

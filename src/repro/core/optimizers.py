@@ -285,13 +285,14 @@ def with_grad_clip(opt, max_norm: float):
 
 
 # --------------------------------------------------------------------------- #
-# compressed sync (wire codec + error feedback)
+# compressed sync (thin shim over the SyncEngine's device-side encode)
 # --------------------------------------------------------------------------- #
 _RESIDUAL_KEYS = ("res_params", "res_b2")
 
 
 def compressed_sync(base: LocalOptimizer, compression="int8", *,
-                    block: int = 256, use_pallas: bool = False) -> LocalOptimizer:
+                    block: int = 256, use_pallas: bool = False,
+                    fused: bool = True) -> LocalOptimizer:
     """Wrap a LocalOptimizer so its sync payload rides a lossy wire codec.
 
     ``compression`` is a codec name ('bf16', 'int8') or a
@@ -306,6 +307,12 @@ def compressed_sync(base: LocalOptimizer, compression="int8", *,
         residual'  = v − v̂
         synced     = mean_workers(v̂)
 
+    The numerics live in :func:`repro.core.sync_engine.ef_apply` — this
+    wrapper only manages the residual state leaves around the base
+    optimizer's sync. With ``fused`` (and an int8 codec) the whole EF chain
+    runs as ONE HBM pass per leaf (``kernels/sync_fused.py``) instead of
+    three; the two paths are bitwise identical.
+
     The payload is params (and ``b2_local`` for Local AdaAlter). Local steps
     are untouched — compression only changes the communication rounds. With
     ``compression=''`` (or the lossless 'fp32' codec) the base optimizer is
@@ -317,25 +324,16 @@ def compressed_sync(base: LocalOptimizer, compression="int8", *,
     ``opt_state_shardings`` places them exactly like the accumulators.
     """
     from repro.core.codecs import get_codec
+    from repro.core.sync_engine import ef_apply
 
-    codec = get_codec(compression, block=block, use_pallas=use_pallas)
+    codec = get_codec(compression, block=block, use_pallas=use_pallas,
+                      fused=fused)
     if codec.lossless:
         return base
 
     def _compress(tree, residual, batch_ndim, *, clamp_nonneg: bool = False):
-        """-> (wire values cast like tree, new residual)."""
-        v = jax.tree_util.tree_map(
-            lambda x, e: x.astype(jnp.float32) + e, tree, residual)
-        vq = jax.tree_util.tree_map(
-            lambda a: codec.roundtrip(a, min(batch_ndim, a.ndim)), v)
-        if clamp_nonneg:   # accumulators feed rsqrt — keep them >= 0
-            vq = jax.tree_util.tree_map(lambda q: jnp.maximum(q, 0.0), vq)
-        wire = jax.tree_util.tree_map(
-            lambda q, x: q.astype(x.dtype), vq, tree)
-        # residual vs what was ACTUALLY sent (incl. any bf16 wire cast)
-        new_res = jax.tree_util.tree_map(
-            lambda a, w: a - w.astype(jnp.float32), v, wire)
-        return wire, new_res
+        return ef_apply(tree, residual, codec, batch_ndim,
+                        clamp_nonneg=clamp_nonneg)
 
     def init(params):
         state = base.init(params)
@@ -378,16 +376,57 @@ def compressed_sync(base: LocalOptimizer, compression="int8", *,
 
 
 # --------------------------------------------------------------------------- #
+# gradient-staleness anchor (CADA-proper drift statistic)
+# --------------------------------------------------------------------------- #
+_ANCHOR_KEY = "g_anchor"
+
+
+def with_grad_anchor(opt: LocalOptimizer) -> LocalOptimizer:
+    """Carry a per-worker ``g_anchor`` state leaf: the gradient seen at the
+    last sync round, against which the CADA-proper staleness statistic
+    ‖g_t − g_anchor‖² is measured (``drift_metric='grad_staleness'``).
+
+    The wrapper only owns the leaf's lifecycle (init to zeros, thread it
+    through local_step/sync untouched); *writing* the anchor happens in
+    ``launch.steps`` on sync steps, the one place the fresh gradients are in
+    scope. A flat top-level key mirroring the param tree, so
+    ``opt_state_shardings`` places it exactly like the accumulators.
+    """
+
+    def init(params):
+        state = opt.init(params)
+        state[_ANCHOR_KEY] = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return state
+
+    def local_step(grads, state, params):
+        inner = {k: v for k, v in state.items() if k != _ANCHOR_KEY}
+        new_params, new_inner = opt.local_step(grads, inner, params)
+        new_inner[_ANCHOR_KEY] = state[_ANCHOR_KEY]
+        return new_params, new_inner
+
+    def sync(params, state, mean_fn=_tree_mean_identity):
+        inner = {k: v for k, v in state.items() if k != _ANCHOR_KEY}
+        new_params, new_inner = opt.sync(params, inner, mean_fn)
+        new_inner[_ANCHOR_KEY] = state[_ANCHOR_KEY]
+        return new_params, new_inner
+
+    return LocalOptimizer(init, local_step, sync, opt.H)
+
+
+# --------------------------------------------------------------------------- #
 # factory
 # --------------------------------------------------------------------------- #
 def make_optimizer(cfg) -> Any:
     """cfg: OptimizerConfig -> Optimizer | LocalOptimizer.
 
     Assembly order: base algorithm -> ``with_grad_clip`` (clips the gradient
-    every worker actually applies) -> ``compressed_sync`` (wire codec +
-    error feedback on the sync rounds only).
+    every worker actually applies) -> ``with_grad_anchor`` (only when the
+    adaptive policy watches gradient staleness) -> ``compressed_sync`` (wire
+    codec + error feedback on the sync rounds only).
     """
-    compression = getattr(cfg, "compression", "")
+    sync = cfg.sync
+    compression = sync.compression
     grad_clip = getattr(cfg, "grad_clip", 0.0)
     if cfg.name in ("sgd", "adagrad", "adaalter"):
         if compression and compression != "fp32":
@@ -411,10 +450,12 @@ def make_optimizer(cfg) -> Any:
     else:
         raise ValueError(f"unknown optimizer {cfg.name!r}")
     opt = with_grad_clip(opt, grad_clip)
+    from repro.core.sync_engine import drift_statistic
+    if drift_statistic(sync) == "grad_staleness":
+        opt = with_grad_anchor(opt)
     if compression:
-        opt = compressed_sync(opt, compression,
-                              block=getattr(cfg, "compression_block", 256),
-                              use_pallas=cfg.use_pallas)
+        opt = compressed_sync(opt, compression, block=sync.block,
+                              use_pallas=cfg.use_pallas, fused=sync.fused)
     return opt
 
 

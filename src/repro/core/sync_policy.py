@@ -28,7 +28,7 @@ regardless of drift.
 from __future__ import annotations
 
 import math
-from typing import Dict, List
+from typing import Dict, List, Tuple
 
 #: policy names accepted by OptimizerConfig.sync_policy / --sync-policy.
 POLICY_NAMES = ("fixed_h", "adaptive")
@@ -63,6 +63,16 @@ class SyncPolicy:
         if synced:
             self.sync_count += 1
             self.sync_steps.append(step)
+
+    def host_state(self) -> Tuple[int, float]:
+        """(window position, drift accumulator) — the schedule-critical
+        state a checkpoint must carry (``core.sync_engine.SyncState``).
+        Stateless policies (fixed_h anchors on the global step) have none.
+        """
+        return 0, 0.0
+
+    def load_host_state(self, since: int, drift: float) -> None:
+        """Inverse of :meth:`host_state`; no-op for stateless policies."""
 
 
 class FixedHPolicy(SyncPolicy):
@@ -115,11 +125,19 @@ class AdaptiveSyncPolicy(SyncPolicy):
 
     def reset(self, start_step: int = 0) -> None:
         super().reset(start_step)
-        # A restore discards the host-side accumulator; re-anchor the window
-        # at the restore point (conservative: at most h_max extra local
-        # steps relative to the uninterrupted run).
+        # Without a restored SyncState the window re-anchors at the restore
+        # point (conservative: at most h_max extra local steps vs the
+        # uninterrupted run); ``load_host_state`` afterwards resumes the
+        # exact pre-save window instead.
         self._since = 0
         self._drift = 0.0
+
+    def host_state(self) -> Tuple[int, float]:
+        return self._since, self._drift
+
+    def load_host_state(self, since: int, drift: float) -> None:
+        self._since = int(since)
+        self._drift = float(drift)
 
     def want_sync(self, step: int) -> bool:
         k = self._since + 1

@@ -102,6 +102,19 @@ def _to_blocks(x, block: int, batch_ndim: int):
     return flat.reshape(-1, block)
 
 
+def _from_blocks(y2d, shape, batch_ndim: int):
+    """Inverse of :func:`_to_blocks`: strip the per-lead padding and restore
+    ``shape``. The one place the blocked layout is decoded — both the
+    quantize pair and the fused EF kernel (sync_fused.py) go through it."""
+    lead = 1
+    for d in shape[:batch_ndim]:
+        lead *= d
+    body = 1
+    for d in shape[batch_ndim:]:
+        body *= d
+    return y2d.reshape(lead, -1)[:, :body].reshape(shape)
+
+
 def quantize(x, *, block: int = BLOCK, batch_ndim: int = 0,
              use_pallas: bool = True, interpret: bool | None = None):
     """Per-block int8 quantization of an arbitrarily-shaped array.
@@ -130,14 +143,7 @@ def dequantize(q, scales, shape, *, block: int = BLOCK, batch_ndim: int = 0,
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
         y2d = dequantize_blocks(q, scales, interpret=interpret)
-    lead = 1
-    for d in shape[:batch_ndim]:
-        lead *= d
-    body = 1
-    for d in shape[batch_ndim:]:
-        body *= d
-    y = y2d.reshape(lead, -1)[:, :body]
-    return y.reshape(shape)
+    return _from_blocks(y2d, shape, batch_ndim)
 
 
 def fake_quantize(x, *, block: int = BLOCK, batch_ndim: int = 0,

@@ -34,6 +34,26 @@ def dequantize_blocks_ref(q2d, scales):
     return q2d.astype(jnp.float32) * scales
 
 
+def fused_ef_blocks_ref(x2d, e2d, *, clamp_nonneg: bool = False,
+                        out_dtype=None):
+    """Oracle for the fused error-feedback sync encode (sync_fused.py).
+
+    The three-pass composition the fused kernel replaces, written out:
+    v = x + e; (q, s) = quantize(v); v̂ = dequantize(q, s) [clamped >= 0 for
+    accumulator payloads]; wire = v̂ cast to the payload dtype;
+    residual' = v − wire. Returns (wire, residual').
+    """
+    v = x2d.astype(jnp.float32) + e2d
+    q, s = quantize_blocks_ref(v)
+    vhat = dequantize_blocks_ref(q, s)
+    # same lower clamp as the kernel: >= 0 for accumulator payloads, else a
+    # value-preserving pin that keeps v − q·s from contracting into an FMA
+    vhat = jnp.maximum(vhat, 0.0 if clamp_nonneg
+                       else float(jnp.finfo(jnp.float32).min))
+    w = vhat.astype(out_dtype or x2d.dtype)
+    return w, v - w.astype(jnp.float32)
+
+
 def ssd_ref(xbar, Bm, Cm, dA):
     """Pure-jnp oracle for the SSD chunk scan (mirrors models/ssm.py math).
 

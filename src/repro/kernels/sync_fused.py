@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: fused error-feedback sync-payload encode.
+
+The sync round's device-side work — the part Stich (2018) says must be
+near-free for local SGD's speedup to survive — was previously three separate
+HBM passes over the full payload (``core.optimizers.compressed_sync``):
+
+    pass 1   v    = x + e            (error-feedback add)
+    pass 2   q, s = quantize(v)      (per-block int8 + fp32 scales)
+    pass 3   v̂    = dequantize(q, s) ; e' = v − v̂   (residual update)
+
+This kernel fuses all of it into ONE pass: read (x, e), write (wire, e') —
+the int8/scales intermediates never leave VMEM. The wire output is the
+dequantized value cast to the payload dtype (exactly what the in-process
+sync mean averages), and the residual is computed against that cast value,
+so the fused path is **bitwise identical** to the three-pass composition
+(asserted in tests/test_sync_fused.py against ``kernels/ref.py``).
+
+Layout mirrors ``quantize.py``: payloads are flattened (never straddling the
+leading ``batch_ndim`` worker axes), zero-padded to a multiple of BLOCK and
+viewed as ``(nblocks, BLOCK)`` — one quantization block per row — with a 1-D
+grid over row tiles. ``clamp_nonneg`` (the B² accumulators feed rsqrt) is a
+static kernel variant. On CPU (this container) the kernel runs in
+``interpret=True`` mode; on TPU the same code compiles to Mosaic
+(TILE_BLOCKS=512 keeps every store tile a multiple of the fp32 (8,128) and
+bf16 (16,128) tilings).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.quantize import (BLOCK, TILE_BLOCKS, _from_blocks,
+                                    _pad_rows, _to_blocks)
+
+__all__ = ["fused_ef_blocks", "fused_ef_leaf", "BLOCK", "TILE_BLOCKS"]
+
+
+def _fused_kernel(x_ref, e_ref, w_ref, r_ref, *, clamp_nonneg: bool):
+    v = x_ref[...].astype(jnp.float32) + e_ref[...]
+    # per-row (per-block) symmetric int8 quantization — same math as
+    # quantize._quant_kernel so the fusion stays bitwise
+    scale = jnp.max(jnp.abs(v), axis=1, keepdims=True) / 127.0
+    inv = jnp.where(scale > 0, 1.0 / jnp.where(scale > 0, scale, 1.0), 0.0)
+    q = jnp.clip(jnp.round(v * inv), -127.0, 127.0).astype(jnp.int8)
+    vhat = q.astype(jnp.float32) * scale
+    # The lower clamp is load-bearing twice over: accumulator payloads feed
+    # rsqrt and must stay >= 0, and for plain payloads the (value-preserving)
+    # max against float32 min keeps the backend from contracting the
+    # following v − q·scale into an FMA — which would skip the product's
+    # rounding and drift the residual half an ulp off the three-pass
+    # composition, whose dequantized wire is materialized at a kernel
+    # boundary. With the max in between, both paths subtract the same
+    # rounded value and the bitwise match holds at any payload size.
+    lower = 0.0 if clamp_nonneg else float(jnp.finfo(jnp.float32).min)
+    vhat = jnp.maximum(vhat, lower)
+    w = vhat.astype(w_ref.dtype)
+    w_ref[...] = w
+    # residual vs what is ACTUALLY sent (incl. any bf16 wire cast)
+    r_ref[...] = v - w.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("clamp_nonneg", "out_dtype",
+                                             "tile_blocks", "interpret"))
+def fused_ef_blocks(x2d, e2d, *, clamp_nonneg: bool = False, out_dtype=None,
+                    tile_blocks: int = TILE_BLOCKS, interpret: bool = False):
+    """One-pass EF encode of a (nblocks, block) view.
+
+    Returns ``(wire, new_residual)``: wire is ``out_dtype`` (default: x2d's
+    dtype) holding decode(encode(x+e)); new_residual is fp32 (x+e) − wire.
+    """
+    nb, block = x2d.shape
+    out_dtype = jnp.dtype(out_dtype or x2d.dtype)
+    xp = _pad_rows(x2d, tile_blocks)
+    ep = _pad_rows(e2d, tile_blocks)
+    grid = (xp.shape[0] // tile_blocks,)
+    bspec = pl.BlockSpec((tile_blocks, block), lambda i: (i, 0))
+    w, r = pl.pallas_call(
+        functools.partial(_fused_kernel, clamp_nonneg=clamp_nonneg),
+        grid=grid,
+        in_specs=[bspec, bspec],
+        out_specs=[bspec, bspec],
+        out_shape=[jax.ShapeDtypeStruct(xp.shape, out_dtype),
+                   jax.ShapeDtypeStruct(xp.shape, jnp.float32)],
+        interpret=interpret,
+    )(xp, ep)
+    return w[:nb], r[:nb]
+
+
+def fused_ef_leaf(x, e, *, block: int = BLOCK, batch_ndim: int = 0,
+                  clamp_nonneg: bool = False, use_pallas: bool = True,
+                  interpret: bool | None = None):
+    """Fused EF encode of one arbitrarily-shaped payload leaf.
+
+    ``x`` is the payload (any float dtype), ``e`` the fp32 residual of the
+    same shape. Returns ``(wire, new_residual)`` shaped like ``x``: wire in
+    x's dtype (what goes into the sync mean), new_residual fp32.
+    ``use_pallas=False`` runs the pure-jnp oracle (kernels/ref.py) on the
+    same blocked view — still a single jitted program, just not hand-tiled.
+    """
+    batch_ndim = min(batch_ndim, x.ndim)
+    x2d = _to_blocks(x, block, batch_ndim)
+    e2d = _to_blocks(e, block, batch_ndim)
+    if use_pallas:
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        w2d, r2d = fused_ef_blocks(x2d, e2d, clamp_nonneg=clamp_nonneg,
+                                   out_dtype=x.dtype, interpret=interpret)
+    else:
+        from repro.kernels.ref import fused_ef_blocks_ref
+        w2d, r2d = fused_ef_blocks_ref(x2d, e2d, clamp_nonneg=clamp_nonneg,
+                                       out_dtype=x.dtype)
+
+    return (_from_blocks(w2d, x.shape, batch_ndim).astype(x.dtype),
+            _from_blocks(r2d, x.shape, batch_ndim).astype(jnp.float32))

@@ -98,9 +98,12 @@ def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool,
             params, opt_state = _abstract(abstract[0]), _abstract(abstract[1])
             batch = train_batch_specs(
                 cfg, shape, programs.n_workers if programs.is_local else 0)
-            from repro.core.comm import sync_payload_bytes
+            from repro.core.sync_engine import make_sync_engine
             from repro.models.counting import count_params
             n_params = count_params(cfg)
+            engine = make_sync_engine(
+                opt_cfg, is_local=programs.is_local,
+                H=programs.H if programs.is_local else 1)
             variants = [("local_step", programs.local_step)]
             if programs.is_local:
                 variants.append(("sync_step", programs.sync_step))
@@ -113,10 +116,7 @@ def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool,
                 rec = rep.to_dict()
                 # codec-modeled per-worker sync payload for THIS variant, to
                 # compare against the measured HLO collective bytes above
-                modeled = (sync_payload_bytes(
-                               opt_name, n_params,
-                               compression=opt_cfg.compression,
-                               block=opt_cfg.compression_block)
+                modeled = (engine.round_bytes(n_params)
                            if vname == "sync_step" else 0.0)
                 rec.update(variant=vname, plan=dataclasses.asdict(plan),
                            n_workers=programs.n_workers, H=programs.H,

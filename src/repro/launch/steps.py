@@ -12,18 +12,21 @@ Training with a *local* optimizer (the paper's Algorithms 2/4):
   The two variants are compiled separately (static ``do_sync``) so the
   dry-run can attribute collective bytes to each and report the amortized
   ``local + sync/H`` volume exactly. *Which* variant runs each step is the
-  host-side ``SyncPolicy``'s call (``core/sync_policy.py``): to feed the
+  ``SyncEngine``'s call (``core/sync_engine.py``, host-side): to feed its
   adaptive (CADA-style) policy — and only when it is configured — the local
-  train steps additionally emit ``metrics['drift']``: the per-worker
-  parameter movement of the step relative to the parameter norm, reduced to
-  one scalar. The statistic is
-  computed from arrays the update already touched and reduces each worker
-  to a scalar *before* the (R,)-sized cross-worker mean, so the skipped
-  rounds stay communication-free in any meaningful sense.
-  With ``OptimizerConfig.compression`` set ('int8', 'bf16') the sync payload
+  train steps additionally emit ``metrics['drift']``, the statistic
+  ``SyncConfig.drift_metric`` selects: ``update_norm`` (per-worker parameter
+  movement of the step relative to the parameter norm) or ``grad_staleness``
+  (CADA-proper ‖g_t − g_last_sync‖² against the ``g_anchor`` state leaf,
+  which sync steps re-anchor). Either statistic reduces each worker to a
+  scalar *before* the (R,)-sized cross-worker mean, so the skipped rounds
+  stay communication-free in any meaningful sense.
+  With ``SyncConfig.compression`` set ('int8', 'bf16') the sync payload
   rides the corresponding ``WireCodec`` (``core/codecs.py``; error feedback)
-  via the ``compressed_sync`` wrapper inside ``opt.sync`` — only the
-  sync_step changes; local steps stay untouched.
+  via the ``compressed_sync`` shim inside ``opt.sync`` — fused into a
+  one-HBM-pass Pallas kernel when the codec provides it
+  (``kernels/sync_fused.py``) — so only the sync_step changes; local steps
+  stay untouched.
 
 Training with a synchronous optimizer (Alg. 1/3, or models too large for
 per-worker replicas): classic data-parallel/FSDP — gradients are implicitly
@@ -94,6 +97,25 @@ def _drift_stat(new_params, params):
     d = opt_lib.global_norm(delta, batch_ndim=1)
     p = opt_lib.global_norm(params, batch_ndim=1)
     return jnp.mean(d / (p + 1e-12))
+
+
+def _staleness_stat(grads, anchor):
+    """CADA-proper gradient staleness, as a single scalar.
+
+    mean over workers of ‖g_i,t − g_i,last_sync‖² / (‖g_i,t‖² + tiny) —
+    the squared distance to the gradient each worker saw at its last sync
+    round (kept in the ``g_anchor`` state leaf), normalized by the current
+    gradient's energy so the threshold is scale-free. Like
+    :func:`_drift_stat`, each worker reduces to a scalar before the
+    (R,)-sized cross-worker mean, so skipped rounds stay communication-free.
+    The anchor starts at zero, so the first window reads a statistic of
+    ~1/step — which triggers an early first sync, a conservative start.
+    """
+    delta = jax.tree_util.tree_map(
+        lambda g, a: g.astype(jnp.float32) - a, grads, anchor)
+    d2 = jnp.square(opt_lib.global_norm(delta, batch_ndim=1))
+    g2 = jnp.square(opt_lib.global_norm(grads, batch_ndim=1))
+    return jnp.mean(d2 / (g2 + 1e-12))
 
 
 @dataclasses.dataclass
@@ -178,16 +200,21 @@ def build_train_programs(cfg: ModelConfig, shape: ShapeConfig,
             if opt_cfg.use_pallas and opt_cfg.name == "local_adaalter":
                 from repro.kernels.ops import tree_fused_update
                 # the fused kernel bypasses opt.local_step, so the grad_clip
-                # wrapper never sees these grads — clip per worker here
+                # wrapper never sees these grads — clip per worker here.
+                # `grads` itself stays RAW: the drift statistics below must
+                # see the same values the non-Pallas path's stat sees (there
+                # the wrapper clips inside opt.local_step, after the stat's
+                # inputs are captured).
+                applied = grads
                 if opt_cfg.grad_clip > 0:
-                    grads, _ = opt_lib.clip_by_global_norm(
+                    applied, _ = opt_lib.clip_by_global_norm(
                         grads, opt_cfg.grad_clip, batch_ndim=1)
                 step_no = opt_state["step"] + 1
                 tprime = opt_state["tprime"] + 1
                 eta = opt_lib.warmup_lr(opt_cfg.lr, step_no[0], opt_cfg.warmup_steps)
                 extra = tprime[0].astype(jnp.float32) * opt_cfg.eps ** 2
                 new_params, new_b2 = tree_fused_update(
-                    params, grads, opt_state["b2_sync"], opt_state["b2_local"],
+                    params, applied, opt_state["b2_sync"], opt_state["b2_local"],
                     eta, extra, use_pallas=True)
                 # keep extra leaves (e.g. compressed_sync's error-feedback
                 # residuals) instead of rebuilding the dict from scratch
@@ -197,15 +224,28 @@ def build_train_programs(cfg: ModelConfig, shape: ShapeConfig,
                 new_params, new_state = vlocal(grads, opt_state, params)
             out_metrics = {"loss": jnp.mean(loss),
                            **{k: jnp.mean(v) for k, v in metrics.items()}}
-            # divergence stat for the adaptive sync policy, measured on the
-            # pre-averaging local update (the movement that causes drift);
-            # fixed_h never reads it, so don't make its hot loop pay the
-            # two extra full-parameter reductions
-            if getattr(opt_cfg, "sync_policy", "fixed_h") == "adaptive":
+            # divergence stat for the adaptive sync policy (its only
+            # consumer — fixed_h never reads it, so don't make its hot loop
+            # pay the extra full-parameter reductions). Which statistic is
+            # the SyncConfig's drift_metric: the per-step relative update
+            # norm, or the CADA-proper gradient staleness vs the g_anchor
+            # state leaf (with_grad_anchor).
+            from repro.core.sync_engine import drift_statistic
+            stat = drift_statistic(opt_cfg.sync)
+            staleness = stat == "grad_staleness"
+            if staleness:
+                out_metrics["drift"] = _staleness_stat(
+                    grads, opt_state["g_anchor"])
+            elif stat is not None:
                 out_metrics["drift"] = _drift_stat(new_params, params)
             if do_sync:
                 new_params, new_state = opt.sync(new_params, new_state,
                                                  _mean_over_workers)
+                if staleness:
+                    # re-anchor the staleness statistic at THIS round's
+                    # per-worker gradients (the one place they're in scope)
+                    new_state = {**new_state, "g_anchor": jax.tree_util.tree_map(
+                        lambda g: g.astype(jnp.float32), grads)}
             return new_params, new_state, out_metrics
     else:
         def step(params, opt_state, batch, *, do_sync: bool):

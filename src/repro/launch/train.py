@@ -4,16 +4,20 @@ Trains any architecture config (typically a ``--reduced`` variant on CPU)
 with any of the paper's optimizers on the synthetic non-IID LM stream,
 logging loss/PPL and the communication volume each algorithm actually moved.
 
-The sync schedule is owned by a host-side ``SyncPolicy``
-(``core/sync_policy.py``): ``--sync-policy fixed_h`` is the paper's
-every-H-steps schedule (bit-identical to the historical modulo loop,
-including across checkpoint restores), ``--sync-policy adaptive`` triggers
-the sync round on the accumulated parameter drift the compiled steps emit
-(CADA-style), bounded by ``--h-min``/``--h-max``. The sync wire format is a
-``WireCodec`` (``core/codecs.py``): ``--compress bf16`` halves the payload,
-``--compress int8`` shrinks it ~4x with error feedback. ``TrainResult``
-reports the *measured* sync count/steps and the comm bytes they moved, not
-the static ``2P/H`` formula.
+The whole sync round is owned by one ``SyncEngine``
+(``core/sync_engine.py``) composing the schedule, the wire format, and the
+device-side encode: ``--sync-policy fixed_h`` is the paper's every-H-steps
+schedule (bit-identical to the historical modulo loop, including across
+checkpoint restores), ``--sync-policy adaptive`` triggers the sync round on
+the accumulated divergence statistic the compiled steps emit (CADA-style,
+``--drift-metric update_norm|grad_staleness``), bounded by
+``--h-min``/``--h-max``. ``--compress bf16`` halves the payload,
+``--compress int8`` shrinks it ~4x with error feedback — fused into a
+single-HBM-pass Pallas kernel unless ``--unfused-sync``. Checkpoints carry
+the engine's ``SyncState`` (drift accumulator + window position) next to
+``(params, opt_state)``, so a mid-window restore resumes the exact adaptive
+schedule. ``TrainResult`` reports the *measured* sync count/steps and the
+comm bytes they moved, not the static ``2P/H`` formula.
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --reduced \
       --optimizer local_adaalter --H 4 --steps 200 --batch 16 --seq 128
@@ -38,9 +42,8 @@ from repro.configs import (ARCHS, OptimizerConfig, ShapeConfig, get_arch,
                            get_shape, reduced)
 from repro.configs.base import ModelConfig, ParallelismPlan, TrainConfig
 from repro.core.codecs import CODEC_NAMES
-from repro.core.comm import (payload_bytes, sync_bytes_per_step,
-                             sync_payload_bytes)
-from repro.core.sync_policy import POLICY_NAMES, make_sync_policy
+from repro.core.sync_engine import DRIFT_METRICS, make_sync_engine
+from repro.core.sync_policy import POLICY_NAMES
 from repro.data import SyntheticLM, make_train_batch
 from repro.launch.mesh import resolve_plan
 from repro.launch.steps import build_train_programs
@@ -95,34 +98,53 @@ def train_loop(cfg: ModelConfig, shape: ShapeConfig, opt_cfg: OptimizerConfig,
                          n_workers=max(R, 1), seed=seed, non_iid=non_iid)
         params, opt_state = programs.init_fn(jax.random.PRNGKey(seed))
 
-        start_step = 0
-        if checkpoint_dir:
-            from repro.checkpoint import latest_step, restore_checkpoint
-            if latest_step(checkpoint_dir) is not None:
-                state, start_step = restore_checkpoint(
-                    checkpoint_dir, jax.eval_shape(lambda: (params, opt_state)))
-                params, opt_state = state
-                if verbose:
-                    print(f"restored checkpoint at step {start_step}")
-
-        # The sync schedule is the policy's call, consulted host-side between
-        # the two compiled step programs (core/sync_policy.py). fixed_h
-        # reproduces the historical `(step+1) % H` modulo bit-identically.
-        policy = make_sync_policy(opt_cfg, is_local=programs.is_local,
+        # The whole sync round is the engine's: the host-side schedule
+        # (fixed_h reproduces the historical `(step+1) % H` modulo
+        # bit-identically), the wire codec, the fused device-side encode
+        # the jitted sync_step already contains, and the checkpointable
+        # SyncState the adaptive schedule resumes from.
+        engine = make_sync_engine(opt_cfg, is_local=programs.is_local,
                                   H=programs.H if programs.is_local else 1)
-        policy.reset(start_step)
+        start_step = 0
+        sync_state = None
+        if checkpoint_dir:
+            from repro.checkpoint import (checkpoint_keys, latest_step,
+                                          restore_checkpoint)
+            if latest_step(checkpoint_dir) is not None:
+                abstract = jax.eval_shape(lambda: (params, opt_state))
+                # Pre-SyncState checkpoints are (params, opt_state)
+                # 2-tuples; pick the template matching the on-disk manifest
+                # so the adaptive window just re-anchors for those, while a
+                # genuinely mismatched checkpoint (different arch/worker
+                # count) still fails with its real shape/key error.
+                legacy = not any(k.startswith("#2/")
+                                 for k in checkpoint_keys(checkpoint_dir))
+                like = (abstract if legacy
+                        else (*abstract, engine.export_state()))
+                state, start_step = restore_checkpoint(checkpoint_dir, like)
+                if legacy:
+                    params, opt_state = state
+                else:
+                    params, opt_state, sync_state = state
+                if verbose:
+                    print(f"restored checkpoint at step {start_step}"
+                          f"{' (no SyncState)' if legacy else ''}")
+        engine.reset(start_step)
+        if sync_state is not None:
+            engine.import_state(sync_state)
         losses, ppls = [], []
         t0 = time.time()
         for step in range(start_step, steps):
             batch_np = make_train_batch(cfg, shape, ds, step,
                                         n_workers=R if programs.is_local else 0)
             batch = jax.tree_util.tree_map(jnp.asarray, batch_np)
-            do_sync = policy.want_sync(step)
+            do_sync = engine.want_sync(step)
             fn = programs.sync_step if do_sync else programs.local_step
             params, opt_state, metrics = fn(params, opt_state, batch)
             loss = float(metrics["loss"])
-            policy.observe(step, do_sync,
-                           {"drift": float(metrics.get("drift", 0.0))})
+            engine.observe(step, do_sync,
+                           {"drift": float(metrics.get("drift", 0.0))}
+                           if engine.wants_drift else None)
             losses.append(loss)
             ppls.append(math.exp(min(loss, 30.0)))
             if verbose and (step % log_every == 0 or step == steps - 1):
@@ -131,32 +153,29 @@ def train_loop(cfg: ModelConfig, shape: ShapeConfig, opt_cfg: OptimizerConfig,
             if checkpoint_dir and checkpoint_every and \
                     (step + 1) % checkpoint_every == 0:
                 from repro.checkpoint import save_checkpoint
-                save_checkpoint(checkpoint_dir, step + 1, (params, opt_state))
+                save_checkpoint(checkpoint_dir, step + 1,
+                                (params, opt_state, engine.export_state()))
 
         wall = time.time() - t0
         n_params = count_params(cfg)
         executed = max(steps - start_step, 0)
         # Measured comm: what the schedule that actually ran moved — the
-        # policy's sync count times the per-round codec payload (for local
+        # engine's sync count times its per-round codec payload (for local
         # optimizers; synchronous ones all-reduce a gradient every step).
         # The static 2P/H formula is kept alongside as `comm_bytes_modeled`;
         # the two diverge under the adaptive policy and after a restore into
         # the middle of an H-window.
         if programs.is_local:
-            total = policy.sync_count * sync_payload_bytes(
-                opt_cfg.name, n_params, compression=opt_cfg.compression,
-                block=opt_cfg.compression_block)
-            modeled = sync_bytes_per_step(opt_cfg.name, n_params, opt_cfg.H,
-                                          compression=opt_cfg.compression,
-                                          block=opt_cfg.compression_block)
+            total = engine.sync_count * engine.round_bytes(n_params)
+            modeled = engine.modeled_bytes_per_step(n_params)
         else:
             # Synchronous execution (incl. a LocalOptimizer forced onto a
             # sync-only plan, where `sync` runs every step with an identity
             # mean): the only wire traffic is GSPMD's per-step gradient
             # all-reduce — P bytes, untouched by H or the sync codec — so
             # both numbers report that, not the inapplicable 2P/H formula.
-            total = executed * payload_bytes(n_params)
-            modeled = payload_bytes(n_params)
+            total = executed * engine.grad_allreduce_bytes(n_params)
+            modeled = engine.grad_allreduce_bytes(n_params)
         # After a restore only the post-restore losses exist: report the
         # steps actually executed and guard the empty-run case (restore at or
         # past the target used to yield steps=target and a NaN-mean warning).
@@ -167,11 +186,11 @@ def train_loop(cfg: ModelConfig, shape: ShapeConfig, opt_cfg: OptimizerConfig,
                            else 0.0,
                            wall_s=wall, final_loss=final,
                            start_step=start_step,
-                           sync_count=policy.sync_count,
-                           sync_steps=list(policy.sync_steps),
+                           sync_count=engine.sync_count,
+                           sync_steps=list(engine.sync_steps),
                            comm_bytes_total=total,
                            comm_bytes_modeled=modeled,
-                           sync_policy=policy.name)
+                           sync_policy=engine.name)
 
 
 def main() -> None:
@@ -203,13 +222,28 @@ def main() -> None:
                          "--sync-threshold, no sooner than --h-min steps, "
                          "no later than --h-max")
     ap.add_argument("--sync-threshold", type=float, default=0.05,
-                    help="adaptive trigger on the accumulated per-step "
-                         "relative parameter drift (metrics['drift'])")
+                    help="adaptive trigger on the accumulated drift "
+                         "statistic (metrics['drift'])")
+    ap.add_argument("--drift-metric", default="update_norm",
+                    choices=DRIFT_METRICS,
+                    help="which drift statistic feeds the adaptive policy: "
+                         "'update_norm' (relative per-step parameter "
+                         "movement) or 'grad_staleness' (CADA-proper "
+                         "relative ||g_t - g_last_sync||^2)")
     ap.add_argument("--h-min", type=int, default=1,
                     help="adaptive: minimum local steps between syncs")
     ap.add_argument("--h-max", type=int, default=0,
                     help="adaptive: maximum local steps between syncs "
                          "(0 -> 4*H)")
+    ap.add_argument("--unfused-sync", action="store_true",
+                    help="compose the sync encode from three HBM passes "
+                         "(EF add / quantize / dequantize+residual) instead "
+                         "of the fused one-pass kernel — bitwise identical; "
+                         "bench/debug knob")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="route the fused AdaAlter update and the sync "
+                         "codec through the Pallas kernels (interpret mode "
+                         "off-TPU, Mosaic on TPU)")
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--iid", action="store_true", help="disable non-IID workers")
@@ -221,12 +255,15 @@ def main() -> None:
         cfg = reduced(cfg, vocab=args.vocab)
     shape = ShapeConfig(name="cli", seq_len=args.seq, global_batch=args.batch,
                         kind="train")
-    opt_cfg = OptimizerConfig(name=args.optimizer, lr=args.lr, H=args.H,
-                              warmup_steps=args.warmup,
-                              compression=args.compress,
-                              sync_policy=args.sync_policy,
-                              sync_threshold=args.sync_threshold,
-                              h_min=args.h_min, h_max=args.h_max)
+    from repro.configs.base import SyncConfig
+    opt_cfg = OptimizerConfig.from_sync(
+        SyncConfig(policy=args.sync_policy, threshold=args.sync_threshold,
+                   h_min=args.h_min, h_max=args.h_max,
+                   drift_metric=args.drift_metric,
+                   compression=args.compress,
+                   fused=not args.unfused_sync),
+        name=args.optimizer, lr=args.lr, H=args.H,
+        warmup_steps=args.warmup, use_pallas=args.use_pallas)
     sched = (f"H={args.H}" if args.sync_policy == "fixed_h" else
              f"adaptive(thr={args.sync_threshold}, "
              f"h=[{args.h_min},{args.h_max or 4 * args.H}])")

@@ -4,7 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.checkpoint import (checkpoint_keys, latest_step,
+                              restore_checkpoint, save_checkpoint)
 
 
 @pytest.fixture
@@ -41,6 +42,18 @@ def test_latest_step_picks_max(tmp_path, state):
     assert latest_step(d) == 20
     _, step = restore_checkpoint(d, jax.eval_shape(lambda: state))
     assert step == 20
+
+
+def test_checkpoint_keys_reads_manifest(tmp_path, state):
+    d = str(tmp_path)
+    with pytest.raises(FileNotFoundError):
+        checkpoint_keys(d)
+    save_checkpoint(d, 4, (state, {"extra": jnp.zeros(2)}))
+    keys = checkpoint_keys(d)
+    assert "#0/opt/step" in keys and "#1/extra" in keys
+    # structure sniffing without loading arrays: how train_loop detects
+    # pre-SyncState 2-tuple checkpoints
+    assert not any(k.startswith("#2/") for k in keys)
 
 
 def test_structure_mismatch_raises(tmp_path, state):

@@ -1,0 +1,237 @@
+"""Fused one-HBM-pass sync encode vs the three-pass composition, bitwise.
+
+The acceptance bar for kernels/sync_fused.py: inside one compile unit (the
+compiled sync_step is where all of this runs), the fused kernel must match
+the error-feedback add + quantize + dequantize + residual-update chain
+bit-for-bit — wire values, residuals, and the B² accumulator payloads that
+become the denominators. Eager op-by-op execution is NOT the reference:
+XLA contracts v − q·scale into an FMA when it compiles either path, so the
+comparisons here jit both sides (exactly what the train step does).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import OptimizerConfig
+from repro.core import optimizers as opt
+from repro.core.codecs import get_codec
+from repro.core.sync_engine import ef_apply
+from repro.kernels.ref import fused_ef_blocks_ref
+from repro.kernels.sync_fused import BLOCK, fused_ef_blocks, fused_ef_leaf
+
+SHAPES = [
+    (100,),                  # sub-block 1-D (padded path)
+    (256,),                  # exactly one block
+    (3000,),                 # non-multiple 1-D
+    (4, 1000),               # batched leaf (worker axis)
+    (2, 3, 130),             # 3-D leaf
+    (600, 256),              # > one grid tile when tile_blocks is small
+]
+
+
+def _payload(shape, dtype, seed, scale=0.5):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+    return (x * scale).astype(dtype)
+
+
+def _residual(shape, seed):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape,
+                             jnp.float32) * 0.01
+
+
+def _assert_bitwise(a, b, what=""):
+    np.testing.assert_array_equal(
+        np.asarray(a.astype(jnp.float32)), np.asarray(b.astype(jnp.float32)),
+        err_msg=what)
+
+
+# --------------------------------------------------------------------------- #
+# kernel == oracle
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("clamp", [False, True])
+def test_fused_kernel_matches_oracle(shape, dtype, clamp):
+    bnd = 1 if len(shape) > 1 else 0
+    x = _payload(shape, dtype, sum(shape))
+    e = _residual(shape, 7)
+    fk = jax.jit(functools.partial(fused_ef_leaf, batch_ndim=bnd,
+                                   clamp_nonneg=clamp, use_pallas=True))
+    fr = jax.jit(functools.partial(fused_ef_leaf, batch_ndim=bnd,
+                                   clamp_nonneg=clamp, use_pallas=False))
+    wk, rk = fk(x, e)
+    wr, rr = fr(x, e)
+    assert wk.dtype == x.dtype and rk.dtype == jnp.float32
+    _assert_bitwise(wk, wr, "wire")
+    _assert_bitwise(rk, rr, "residual")
+
+
+def test_fused_blocks_zero_and_extreme_rows():
+    x2d = jnp.concatenate([jnp.zeros((1, BLOCK)),           # all-zero block
+                           jnp.full((1, BLOCK), -3.0),      # constant block
+                           jnp.eye(1, BLOCK) * 1e4])        # one spike
+    e2d = jnp.zeros_like(x2d)
+    w, r = fused_ef_blocks(x2d, e2d, interpret=True)
+    wr, rr = jax.jit(fused_ef_blocks_ref)(x2d, e2d)   # same-compile-unit rule
+    np.testing.assert_array_equal(np.asarray(w), np.asarray(wr))
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(rr))
+    # zero block: scale 0 -> wire 0, residual 0 (error feedback has nothing
+    # to re-send)
+    assert np.all(np.asarray(w[0]) == 0) and np.all(np.asarray(r[0]) == 0)
+    np.testing.assert_allclose(np.asarray(w[1]), -3.0, rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_error_feedback_identity(shape):
+    """wire + residual == x + e exactly (what EF re-sends next round)."""
+    bnd = 1 if len(shape) > 1 else 0
+    x = _payload(shape, jnp.float32, 3)
+    e = _residual(shape, 4)
+    w, r = jax.jit(functools.partial(fused_ef_leaf, batch_ndim=bnd,
+                                     use_pallas=True))(x, e)
+    v = np.asarray(x, np.float64) + np.asarray(e, np.float64)
+    np.testing.assert_allclose(np.asarray(w, np.float64)
+                               + np.asarray(r, np.float64), v,
+                               rtol=0, atol=np.abs(v).max() * 2e-7)
+
+
+def test_clamp_nonneg_clamps_and_accounts_residual():
+    x = jnp.linspace(-0.5, 1.0, 512)          # negative payload values
+    e = jnp.zeros_like(x)
+    w, r = jax.jit(functools.partial(fused_ef_leaf, clamp_nonneg=True,
+                                     use_pallas=True))(x, e)
+    assert float(jnp.min(w)) >= 0.0
+    # clamped mass moves into the residual, not the void
+    neg = np.asarray(x) < -1e-3
+    np.testing.assert_allclose(np.asarray(r)[neg], np.asarray(x)[neg],
+                               atol=1e-2)
+
+
+# --------------------------------------------------------------------------- #
+# fused == three-pass composition (ef_apply dispatch), one compile unit
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("use_pallas", [False, True])
+@pytest.mark.parametrize("clamp", [False, True])
+def test_ef_apply_fused_matches_three_pass(use_pallas, clamp):
+    tree = {"a": _payload((3, 1000), jnp.float32, 0),
+            "b": _payload((2, 3, 130), jnp.bfloat16, 1)}
+    res = {"a": _residual((3, 1000), 2), "b": _residual((2, 3, 130), 3)}
+    fused = get_codec("int8", use_pallas=use_pallas, fused=True)
+    unfused = get_codec("int8", use_pallas=use_pallas, fused=False)
+    assert fused.ef_roundtrip is not None and unfused.ef_roundtrip is None
+    jf = jax.jit(lambda t, r: ef_apply(t, r, fused, 1, clamp_nonneg=clamp))
+    ju = jax.jit(lambda t, r: ef_apply(t, r, unfused, 1, clamp_nonneg=clamp))
+    (wf, rf), (wu, ru) = jf(tree, res), ju(tree, res)
+    for k in tree:
+        _assert_bitwise(wf[k], wu[k], f"wire[{k}]")
+        _assert_bitwise(rf[k], ru[k], f"residual[{k}]")
+
+
+def test_ef_apply_lossless_codec_zero_residual():
+    tree = {"w": _payload((300,), jnp.float32, 5)}
+    res = {"w": _residual((300,), 6)}
+    w, r = ef_apply(tree, res, get_codec("fp32"), 0)
+    np.testing.assert_allclose(
+        np.asarray(w["w"]), np.asarray(tree["w"]) + np.asarray(res["w"]),
+        rtol=1e-7)
+    assert np.abs(np.asarray(r["w"])).max() == 0.0
+
+
+# --------------------------------------------------------------------------- #
+# end-to-end: compressed_sync(fused) == compressed_sync(unfused), bitwise
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_compressed_sync_fused_bitwise_end_to_end(use_pallas):
+    """Three H=2 windows of Local AdaAlter through jitted step+sync: params,
+    error-feedback residuals AND the synced B² denominators must agree
+    bit-for-bit between the fused and three-pass engines."""
+
+    def build(fused):
+        o = opt.make_optimizer(OptimizerConfig(
+            name="local_adaalter", lr=0.3, H=2, warmup_steps=0,
+            compression="int8", use_pallas=use_pallas, sync_fused=fused))
+
+        @jax.jit
+        def window(params, state, gs):
+            for g in gs:
+                params, state = o.local_step({"w": g}, state, params)
+            return o.sync(params, state)
+
+        return o, window
+
+    rng = np.random.default_rng(0)
+    gs0 = [jnp.asarray(rng.normal(size=700) * 0.1, jnp.float32)
+           for _ in range(6)]
+    outs = {}
+    for fused in (True, False):
+        o, window = build(fused)
+        params = {"w": jnp.asarray(
+            np.random.default_rng(1).normal(size=700), jnp.float32)}
+        state = o.init(params)
+        for t in range(3):
+            params, state = window(params, state, gs0[2 * t:2 * t + 2])
+        outs[fused] = (params, state)
+    (p1, s1), (p2, s2) = outs[True], outs[False]
+    np.testing.assert_array_equal(np.asarray(p1["w"]), np.asarray(p2["w"]))
+    for key in ("b2_sync", "b2_local", "res_params", "res_b2"):
+        np.testing.assert_array_equal(
+            np.asarray(s1[key]["w"]), np.asarray(s2[key]["w"]),
+            err_msg=key)
+
+
+# --------------------------------------------------------------------------- #
+# property tests (hypothesis; skipped where it is not installed)
+# --------------------------------------------------------------------------- #
+try:
+    import hypothesis  # noqa: F401
+    _HAS_HYP = True
+except ImportError:
+    _HAS_HYP = False
+
+if _HAS_HYP:
+    from hypothesis import given, settings, strategies as st
+    import hypothesis.extra.numpy as hnp
+
+    finite = st.floats(min_value=-100, max_value=100, allow_nan=False,
+                       allow_infinity=False, width=32)
+
+    @settings(max_examples=20, deadline=None)
+    @given(hnp.arrays(np.float32, st.integers(1, 700).map(lambda n: (n,)),
+                      elements=finite),
+           st.integers(0, 2 ** 31 - 1), st.booleans())
+    def test_property_fused_matches_oracle(xs, seed, clamp):
+        x = jnp.asarray(xs)
+        e = jax.random.normal(jax.random.PRNGKey(seed), x.shape,
+                              jnp.float32) * 0.01
+        fk = jax.jit(functools.partial(fused_ef_leaf, clamp_nonneg=clamp,
+                                       use_pallas=True))
+        fr = jax.jit(functools.partial(fused_ef_leaf, clamp_nonneg=clamp,
+                                       use_pallas=False))
+        (wk, rk), (wr, rr) = fk(x, e), fr(x, e)
+        np.testing.assert_array_equal(np.asarray(wk), np.asarray(wr))
+        np.testing.assert_array_equal(np.asarray(rk), np.asarray(rr))
+        # EF identity: what is sent plus what is kept is what was owed
+        v = np.asarray(x, np.float64) + np.asarray(e, np.float64)
+        if not clamp:
+            np.testing.assert_allclose(
+                np.asarray(wk, np.float64) + np.asarray(rk, np.float64), v,
+                rtol=0, atol=max(np.abs(v).max(), 1.0) * 2e-7)
+
+    @settings(max_examples=20, deadline=None)
+    @given(hnp.arrays(np.float32, st.tuples(st.integers(1, 5),
+                                            st.integers(1, 520)),
+                      elements=finite))
+    def test_property_blocks_never_straddle_workers(x2w):
+        """Per-worker payload boundary: quantizing the stacked (R, n) leaf
+        with batch_ndim=1 equals quantizing each worker's row alone."""
+        x = jnp.asarray(x2w)
+        e = jnp.zeros_like(x)
+        w, r = fused_ef_leaf(x, e, batch_ndim=1, use_pallas=False)
+        for i in range(x.shape[0]):
+            wi, ri = fused_ef_leaf(x[i], e[i], batch_ndim=0,
+                                   use_pallas=False)
+            np.testing.assert_array_equal(np.asarray(w[i]), np.asarray(wi))
+            np.testing.assert_array_equal(np.asarray(r[i]), np.asarray(ri))
