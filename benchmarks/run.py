@@ -7,6 +7,7 @@
   bench_kernels      fused AdaAlter update vs unfused lowering
   bench_sync_compression  int8+error-feedback sync vs fp32 payload
   bench_adaptive_sync     CADA-style adaptive sync policy vs fixed H=4
+  bench_flat_step    flat parameter plane vs per-leaf hot path
   bench_roofline     §Roofline table from the dry-run artifacts
 """
 from __future__ import annotations
@@ -18,7 +19,7 @@ import sys
 import time
 
 ALL = ["epoch_time", "convergence", "kernels", "sync_compression",
-       "adaptive_sync", "roofline"]
+       "adaptive_sync", "flat_step", "roofline"]
 
 
 def main() -> None:
@@ -51,6 +52,9 @@ def main() -> None:
         elif name == "adaptive_sync":
             from benchmarks.bench_adaptive_sync import run as r
             rows += r(steps=60 if args.quick else 120)
+        elif name == "flat_step":
+            from benchmarks.bench_flat_step import run as r
+            rows += r(steps=12 if args.quick else 30)
         elif name == "roofline":
             from benchmarks.bench_roofline import run as r
             rows += r()

@@ -102,6 +102,20 @@ def checkpoint_keys(directory: str, *, step: Optional[int] = None
         return tuple(json.load(f)["keys"])
 
 
+def checkpoint_layout(directory: str, *, step: Optional[int] = None) -> str:
+    """Which parameter layout a checkpoint holds: ``'flat'`` (packed
+    FlatSpace planes — params are ONE array, bare ``#0`` key) or
+    ``'per_leaf'`` (the legacy pytree layout, ``#0/...`` subtree keys).
+
+    Restores work across the two (``core/flatspace.py`` adapters convert
+    after the restore); this is how ``train_loop`` picks the matching
+    restore template without probing."""
+    from repro.core.flatspace import is_flat_checkpoint
+    return ("flat" if is_flat_checkpoint(checkpoint_keys(directory,
+                                                         step=step))
+            else "per_leaf")
+
+
 def restore_checkpoint(directory: str, like: Any, *, step: Optional[int] = None,
                        shardings: Any = None) -> Tuple[Any, int]:
     """Restore into the structure of ``like`` (a live pytree or eval_shape).

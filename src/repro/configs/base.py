@@ -176,6 +176,18 @@ class OptimizerConfig:
     warmup_steps: int = 600                # paper: 600
     grad_clip: float = 0.0                 # global-norm clip; 0 -> off
     use_pallas: bool = False               # fused Pallas update kernel
+    # flat parameter plane (core/flatspace.py): pack params + optimizer +
+    # residual leaves into contiguous tile-aligned fp32 planes at init; the
+    # AdaAlter step becomes ONE kernel launch over the whole plane and the
+    # sync round ONE kernel + ONE collective instead of per-leaf ones.
+    # Given the same sync schedule, the train STATE (params, accumulators,
+    # wire, residuals) is bitwise identical to the per-leaf layout. Derived
+    # scalars (loss, the adaptive policy's drift statistic) are reduction-
+    # order-dependent and may differ in ulps between the two compiled
+    # programs — so an ADAPTIVE schedule can diverge between layouts when
+    # the accumulated drift lands within an ulp of the threshold; fixed_h
+    # schedules are layout-independent. local_adaalter only.
+    flat: bool = False
     # --- flat aliases of the SyncConfig block (read ``cfg.sync`` instead) ---
     sync_policy: str = "fixed_h"
     sync_threshold: float = 0.0

@@ -18,11 +18,27 @@ class FabricModel:
 
     def allreduce_time(self, bytes_per_replica: float, n: int,
                        cross_pod: bool = False) -> float:
-        """Ring all-reduce: 2*(n-1)/n * bytes over the slowest link."""
-        if n <= 1:
+        """Ring all-reduce: 2*(n-1)/n * bytes over the slowest link —
+        :meth:`collective_time` with a single collective."""
+        return self.collective_time(bytes_per_replica, 1, n, cross_pod)
+
+    def collective_time(self, n_bytes: float, n_collectives: int, n: int,
+                        cross_pod: bool = False) -> float:
+        """Alpha-beta model of one sync round issued as ``n_collectives``
+        separate all-reduces totalling ``n_bytes`` per replica.
+
+        alpha: every collective pays the full launch + rendezvous latency,
+        so a per-leaf round pays it L times where the flat plane pays once;
+        beta: the ring transfer term depends only on the TOTAL payload.
+        This is the per-leaf vs flat gap the dry-run and
+        ``benchmarks/bench_flat_step.py`` report:
+        ``t = n_collectives·α + 2(n−1)/n · n_bytes / bw``.
+        """
+        if n <= 1 or n_collectives <= 0:
             return 0.0
         bw = self.dcn_bw if cross_pod else self.ici_bw
-        return 2.0 * (n - 1) / n * bytes_per_replica / bw + self.latency
+        return (n_collectives * self.latency
+                + 2.0 * (n - 1) / n * n_bytes / bw)
 
 
 def bytes_per_param(dtype_bytes: int = 4) -> int:
@@ -77,6 +93,16 @@ def ef_sync_hbm_bytes(n_values: int, *, fused: bool, dtype_bytes: int = 4,
         + (q + 4.0 * n)                      # pass 3: read q,s  write v̂
         + (4.0 * n + 4.0 * n)                # residual: read v, v̂
         + (d * n + 4.0 * n))                 #           write wire, e'
+
+
+def collective_time(n_bytes: float, n_collectives: int, n_workers: int,
+                    fabric: FabricModel = FabricModel(),
+                    cross_pod: bool = False) -> float:
+    """Module-level convenience for :meth:`FabricModel.collective_time` —
+    launch/latency overhead of issuing one sync round as ``n_collectives``
+    collectives (per-leaf: one per payload leaf; flat plane: one)."""
+    return fabric.collective_time(n_bytes, n_collectives, n_workers,
+                                  cross_pod)
 
 
 def sync_round_multiplier(algorithm: str) -> float:

@@ -110,6 +110,13 @@ def ef_apply(tree: Pytree, residual: Pytree, codec: WireCodec,
     """
     flat_x, treedef = jax.tree_util.tree_flatten(tree)
     flat_e = treedef.flatten_up_to(residual)
+    # Pin every payload leaf to its STORED dtype value before encoding.
+    # XLA's excess-precision simplification may otherwise feed the encode an
+    # unrounded fp32 view of a bf16 leaf (whatever the producing update
+    # computed), making the wire/residual bits depend on fusion context —
+    # a real multi-host wire materializes the bf16 buffer, and the flat
+    # plane path (which re-rounds explicitly) must see the same bits.
+    flat_x = [jax.lax.optimization_barrier(x) for x in flat_x]
     if codec.ef_roundtrip is not None:
         pairs = [codec.ef_roundtrip(x, e, min(batch_ndim, x.ndim),
                                     clamp_nonneg)
@@ -129,7 +136,9 @@ def ef_apply(tree: Pytree, residual: Pytree, codec: WireCodec,
         v = x.astype(jnp.float32) + e
         vq = codec.roundtrip(v, min(batch_ndim, v.ndim))
         vq = jnp.maximum(vq, lower)
-        w = vq.astype(x.dtype)
+        # the barrier pins the wire cast the same way (excess precision
+        # would otherwise let the residual subtract the unrounded value)
+        w = jax.lax.optimization_barrier(vq.astype(x.dtype))
         wires.append(w)
         # residual vs what was ACTUALLY sent (incl. any bf16 wire cast)
         residuals.append(v - w.astype(jnp.float32))

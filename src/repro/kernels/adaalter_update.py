@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.tiling import pad_rows, to_blocks
+
 LANES = 128
 BLOCK_ROWS = 512          # (512, 128) fp32 tile = 256 KiB/operand in VMEM
 
@@ -67,24 +69,78 @@ def fused_update_2d(x, g, b2_sync, b2_local, eta, extra, *,
 
 
 def _to_2d(a, block_rows):
-    flat = a.reshape(-1)
-    chunk = block_rows * LANES
-    pad = (-flat.size) % chunk
-    if pad:
-        flat = jnp.pad(flat, (0, pad))
-    return flat.reshape(-1, LANES), pad
+    return pad_rows(to_blocks(a, LANES, 0), block_rows)
 
 
 def fused_update(x, g, b2_sync, b2_local, eta, extra, *,
                  block_rows: int = BLOCK_ROWS, interpret: bool = False):
     """Fused update on an arbitrarily-shaped leaf. Returns (y, new_b2_local)."""
     shape, size = x.shape, x.size
-    x2, _ = _to_2d(x, block_rows)
-    g2, _ = _to_2d(g, block_rows)
-    bs2, _ = _to_2d(b2_sync.astype(jnp.float32), block_rows)
-    bl2, _ = _to_2d(b2_local.astype(jnp.float32), block_rows)
+    x2 = _to_2d(x, block_rows)
+    g2 = _to_2d(g, block_rows)
+    bs2 = _to_2d(b2_sync.astype(jnp.float32), block_rows)
+    bl2 = _to_2d(b2_local.astype(jnp.float32), block_rows)
     y2, blo2 = fused_update_2d(x2, g2, bs2, bl2, eta, extra,
                                block_rows=block_rows, interpret=interpret)
     y = y2.reshape(-1)[:size].reshape(shape)
     blo = blo2.reshape(-1)[:size].reshape(shape)
     return y, blo
+
+
+# --------------------------------------------------------------------------- #
+# flat-plane variant: ONE pallas_call for the whole parameter plane
+# --------------------------------------------------------------------------- #
+def _flat_kernel(scalars_ref, x_ref, g_ref, bs_ref, bl_ref, rnd_ref,
+                 y_ref, blo_ref):
+    """Same math as :func:`_kernel` on fp32 planes; the ``rnd`` sidecar
+    (one fp32 flag per row) marks rows whose leaf dtype is bfloat16 — those
+    writes round through bf16 so the plane keeps holding exactly the bits
+    the per-leaf bf16 store would have produced."""
+    eta = scalars_ref[0]
+    extra = scalars_ref[1]
+    g = g_ref[...]
+    denom = jax.lax.rsqrt(bs_ref[...] + extra)
+    y = x_ref[...] - eta * g * denom
+    y16 = y.astype(jnp.bfloat16).astype(jnp.float32)
+    y_ref[...] = jnp.where(rnd_ref[...] > 0, y16, y)
+    blo_ref[...] = bl_ref[...] + g * g
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def flat_fused_update(plane, g_plane, bs_plane, bl_plane, eta, extra,
+                      rnd_rows, *, block_rows: int = BLOCK_ROWS,
+                      interpret: bool = False):
+    """One-launch Local AdaAlter step over whole fp32 planes.
+
+    Planes are ``(..., P)`` with ``P`` a multiple of ``block_rows*128``
+    (the FlatSpace slot alignment — padding was paid once at pack time, so
+    unlike :func:`fused_update` there is NO per-call pad here). ``rnd_rows``
+    is the per-row (rows, 1) fp32 bf16-rounding sidecar covering the full
+    ``(..., P)`` row space. Returns (new_plane, new_b2_local_plane).
+    """
+    shape = plane.shape
+    x2 = plane.reshape(-1, LANES)
+    rows = x2.shape[0]
+    assert rows % block_rows == 0 and rnd_rows.shape == (rows, 1), \
+        (shape, rnd_rows.shape)
+    scalars = jnp.stack([jnp.asarray(eta, jnp.float32),
+                         jnp.asarray(extra, jnp.float32)])
+    grid = (rows // block_rows,)
+    bspec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    rspec = pl.BlockSpec((block_rows, 1), lambda i: (i, 0))
+    y2, blo2 = pl.pallas_call(
+        _flat_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            bspec, bspec, bspec, bspec, rspec,
+        ],
+        out_specs=[bspec, bspec],
+        out_shape=[
+            jax.ShapeDtypeStruct(x2.shape, jnp.float32),
+            jax.ShapeDtypeStruct(x2.shape, jnp.float32),
+        ],
+        interpret=interpret,
+    )(scalars, x2, g_plane.reshape(-1, LANES), bs_plane.reshape(-1, LANES),
+      bl_plane.reshape(-1, LANES), rnd_rows)
+    return y2.reshape(shape), blo2.reshape(shape)

@@ -25,25 +25,44 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.tiling import from_blocks, pad_rows, to_blocks
+
 BLOCK = 256               # elements per quantization block (2 x 128 lanes)
 TILE_BLOCKS = 512         # blocks per grid step: (512, 256) f32 = 512 KiB VMEM
 
+# back-compat aliases: the padding/blocked-view layout now lives in
+# kernels/tiling.py (shared with sync_fused.py and the flat-plane packer)
+_pad_rows = pad_rows
+_to_blocks = to_blocks
+_from_blocks = from_blocks
+
+
+def block_quantize(v):
+    """THE symmetric per-block int8 quantization: rowwise scale = max|v|/127,
+    q = round(v/scale) ∈ [−127, 127] (all-zero rows quantize to 0).
+
+    Plain jnp ops on a (rows, block) fp32 view, usable inside Pallas kernel
+    bodies and oracles alike — the single definition every path shares
+    (``_quant_kernel`` here, both fused EF kernels in ``sync_fused.py``,
+    and the ``kernels/ref.py`` oracle), because the bitwise contract
+    between the per-leaf and flat paths hinges on the math staying
+    expression-for-expression identical. Returns ``(q int8, scale fp32
+    (rows, 1))``.
+    """
+    scale = jnp.max(jnp.abs(v), axis=1, keepdims=True) / 127.0
+    inv = jnp.where(scale > 0, 1.0 / jnp.where(scale > 0, scale, 1.0), 0.0)
+    q = jnp.clip(jnp.round(v * inv), -127.0, 127.0).astype(jnp.int8)
+    return q, scale
+
 
 def _quant_kernel(x_ref, q_ref, s_ref):
-    x = x_ref[...].astype(jnp.float32)
-    scale = jnp.max(jnp.abs(x), axis=1, keepdims=True) / 127.0
-    inv = jnp.where(scale > 0, 1.0 / jnp.where(scale > 0, scale, 1.0), 0.0)
-    q_ref[...] = jnp.clip(jnp.round(x * inv), -127.0, 127.0).astype(jnp.int8)
+    q, scale = block_quantize(x_ref[...].astype(jnp.float32))
+    q_ref[...] = q
     s_ref[...] = scale
 
 
 def _dequant_kernel(q_ref, s_ref, y_ref):
     y_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[...]
-
-
-def _pad_rows(a, tile):
-    pad = (-a.shape[0]) % tile
-    return jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1)) if pad else a
 
 
 @functools.partial(jax.jit, static_argnames=("tile_blocks", "interpret"))
@@ -89,32 +108,6 @@ def dequantize_blocks(q2d, scales, *, tile_blocks: int = TILE_BLOCKS,
 # --------------------------------------------------------------------------- #
 # arbitrary-leaf wrappers
 # --------------------------------------------------------------------------- #
-def _to_blocks(x, block: int, batch_ndim: int):
-    """Flatten to (nblocks, block), zero-padded; blocks never straddle the
-    leading ``batch_ndim`` axes (the per-worker payload boundary)."""
-    lead = 1
-    for d in x.shape[:batch_ndim]:
-        lead *= d
-    flat = x.reshape(lead, -1) if batch_ndim else x.reshape(1, -1)
-    pad = (-flat.shape[1]) % block
-    if pad:
-        flat = jnp.pad(flat, ((0, 0), (0, pad)))
-    return flat.reshape(-1, block)
-
-
-def _from_blocks(y2d, shape, batch_ndim: int):
-    """Inverse of :func:`_to_blocks`: strip the per-lead padding and restore
-    ``shape``. The one place the blocked layout is decoded — both the
-    quantize pair and the fused EF kernel (sync_fused.py) go through it."""
-    lead = 1
-    for d in shape[:batch_ndim]:
-        lead *= d
-    body = 1
-    for d in shape[batch_ndim:]:
-        body *= d
-    return y2d.reshape(lead, -1)[:, :body].reshape(shape)
-
-
 def quantize(x, *, block: int = BLOCK, batch_ndim: int = 0,
              use_pallas: bool = True, interpret: bool | None = None):
     """Per-block int8 quantization of an arbitrarily-shaped array.

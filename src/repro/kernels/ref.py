@@ -18,15 +18,12 @@ def quantize_blocks_ref(x2d):
     """Symmetric per-block int8 quantization oracle.
 
     x2d: (nblocks, block) — one quantization block per row.
-    Returns (q int8 (nblocks, block), scales fp32 (nblocks, 1)) with
-    scale = max|block| / 127 and q = round(x / scale) ∈ [−127, 127]
-    (all-zero blocks get scale 0 and quantize to 0).
+    Returns (q int8 (nblocks, block), scales fp32 (nblocks, 1)); the math
+    is THE shared ``quantize.block_quantize`` definition, so oracle and
+    kernels cannot drift apart.
     """
-    x = x2d.astype(jnp.float32)
-    scale = jnp.max(jnp.abs(x), axis=1, keepdims=True) / 127.0
-    inv = jnp.where(scale > 0, 1.0 / jnp.where(scale > 0, scale, 1.0), 0.0)
-    q = jnp.clip(jnp.round(x * inv), -127.0, 127.0).astype(jnp.int8)
-    return q, scale
+    from repro.kernels.quantize import block_quantize
+    return block_quantize(x2d.astype(jnp.float32))
 
 
 def dequantize_blocks_ref(q2d, scales):
@@ -43,6 +40,8 @@ def fused_ef_blocks_ref(x2d, e2d, *, clamp_nonneg: bool = False,
     accumulator payloads]; wire = v̂ cast to the payload dtype;
     residual' = v − wire. Returns (wire, residual').
     """
+    import jax
+
     v = x2d.astype(jnp.float32) + e2d
     q, s = quantize_blocks_ref(v)
     vhat = dequantize_blocks_ref(q, s)
@@ -50,8 +49,46 @@ def fused_ef_blocks_ref(x2d, e2d, *, clamp_nonneg: bool = False,
     # value-preserving pin that keeps v − q·s from contracting into an FMA
     vhat = jnp.maximum(vhat, 0.0 if clamp_nonneg
                        else float(jnp.finfo(jnp.float32).min))
-    w = vhat.astype(out_dtype or x2d.dtype)
+    # barrier: the wire cast must stay materialized (excess precision would
+    # otherwise let the residual subtract the unrounded dequantized value)
+    w = jax.lax.optimization_barrier(vhat.astype(out_dtype or x2d.dtype))
     return w, v - w.astype(jnp.float32)
+
+
+def flat_fused_update_ref(plane, g_plane, bs_plane, bl_plane, eta, extra,
+                          rnd16):
+    """jnp fallback for the flat-plane Local AdaAlter step — the SAME bits
+    the per-leaf non-Pallas path (``LocalOptimizer.local_step`` under vmap)
+    produces: that path computes the update in fp32, casts it to the param
+    dtype, and subtracts in the param dtype, so bf16 slots (``rnd16``) go
+    through ``bf16(x) − bf16(upd)`` here rather than rounding the fp32
+    difference (which is what the Pallas pair does — the two fallbacks
+    mirror their respective kernels, not each other)."""
+    import jax
+
+    upd = jnp.asarray(eta, jnp.float32) * g_plane / jnp.sqrt(
+        bs_plane + jnp.asarray(extra, jnp.float32))
+    y32 = plane - upd
+    # barriers pin the bf16 roundings (operand cast AND result) against
+    # XLA's excess-precision simplification — see tiling.round_through_bf16
+    ub = jax.lax.optimization_barrier(upd.astype(jnp.bfloat16))
+    y16 = jax.lax.optimization_barrier(
+        plane.astype(jnp.bfloat16) - ub).astype(jnp.float32)
+    y = jnp.where(rnd16, y16, y32)
+    return y, bl_plane + jnp.square(g_plane)
+
+
+def flat_ef_blocks_ref(x2d, e2d, rnd, low):
+    """Oracle for the flat EF sync kernel (sync_fused._flat_ef_kernel):
+    per-block int8 roundtrip with per-block lower clamp and per-block
+    bf16 wire rounding, all fp32 in/out."""
+    from repro.kernels.tiling import round_through_bf16
+
+    v = x2d + e2d
+    q, s = quantize_blocks_ref(v)
+    vhat = jnp.maximum(dequantize_blocks_ref(q, s), low)
+    w = jnp.where(rnd > 0, round_through_bf16(vhat), vhat)
+    return w, v - w
 
 
 def ssd_ref(xbar, Bm, Cm, dA):

@@ -32,19 +32,20 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.quantize import (BLOCK, TILE_BLOCKS, _from_blocks,
-                                    _pad_rows, _to_blocks)
+from repro.kernels.quantize import BLOCK, TILE_BLOCKS, block_quantize
+from repro.kernels.tiling import from_blocks as _from_blocks
+from repro.kernels.tiling import pad_rows as _pad_rows
+from repro.kernels.tiling import to_blocks as _to_blocks
 
-__all__ = ["fused_ef_blocks", "fused_ef_leaf", "BLOCK", "TILE_BLOCKS"]
+__all__ = ["fused_ef_blocks", "fused_ef_leaf", "flat_ef_plane",
+           "BLOCK", "TILE_BLOCKS"]
 
 
 def _fused_kernel(x_ref, e_ref, w_ref, r_ref, *, clamp_nonneg: bool):
     v = x_ref[...].astype(jnp.float32) + e_ref[...]
-    # per-row (per-block) symmetric int8 quantization — same math as
-    # quantize._quant_kernel so the fusion stays bitwise
-    scale = jnp.max(jnp.abs(v), axis=1, keepdims=True) / 127.0
-    inv = jnp.where(scale > 0, 1.0 / jnp.where(scale > 0, scale, 1.0), 0.0)
-    q = jnp.clip(jnp.round(v * inv), -127.0, 127.0).astype(jnp.int8)
+    # per-row (per-block) symmetric int8 quantization — THE shared
+    # definition (quantize.block_quantize) so the fusion stays bitwise
+    q, scale = block_quantize(v)
     vhat = q.astype(jnp.float32) * scale
     # The lower clamp is load-bearing twice over: accumulator payloads feed
     # rsqrt and must stay >= 0, and for plain payloads the (value-preserving)
@@ -115,3 +116,111 @@ def fused_ef_leaf(x, e, *, block: int = BLOCK, batch_ndim: int = 0,
 
     return (_from_blocks(w2d, x.shape, batch_ndim).astype(x.dtype),
             _from_blocks(r2d, x.shape, batch_ndim).astype(jnp.float32))
+
+
+# --------------------------------------------------------------------------- #
+# flat-plane variant: ONE kernel for the whole sync payload
+# --------------------------------------------------------------------------- #
+def _flat_ef_kernel(x_ref, e_ref, rnd_ref, low_ref, w_ref, r_ref):
+    """Same math as :func:`_fused_kernel`, with the two per-leaf static
+    choices turned into per-block fp32 sidecars so one launch covers the
+    whole [params ‖ B²] payload plane:
+
+      ``low``  the lower clamp — 0 for accumulator blocks (they feed
+               rsqrt), float32-min for parameter blocks (the
+               value-preserving FMA pin, see the fused kernel's comment);
+      ``rnd``  >0 where the leaf dtype is bfloat16 — the wire value rounds
+               through bf16 exactly like the per-leaf ``astype(w_ref.dtype)``
+               store, so wire AND residual bits match the per-leaf kernel.
+    """
+    v = x_ref[...] + e_ref[...]
+    q, scale = block_quantize(v)
+    vhat = q.astype(jnp.float32) * scale
+    vhat = jnp.maximum(vhat, low_ref[...])
+    w16 = vhat.astype(jnp.bfloat16).astype(jnp.float32)
+    w = jnp.where(rnd_ref[...] > 0, w16, vhat)
+    w_ref[...] = w
+    r_ref[...] = v - w
+
+
+@functools.partial(jax.jit, static_argnames=("block", "tile_blocks",
+                                             "interpret"))
+def flat_ef_blocks(x2d, e2d, rnd, low, *, block: int = BLOCK,
+                   tile_blocks: int = TILE_BLOCKS, interpret: bool = False):
+    """One-pass EF encode of a whole payload plane viewed as blocks.
+
+    ``x2d``/``e2d`` are (nblocks, block) fp32; ``rnd``/``low`` are the
+    (nblocks, 1) fp32 sidecars. Returns (wire, new_residual), both fp32 —
+    the wire already rounded through bf16 where ``rnd`` says so.
+    """
+    nb = x2d.shape[0]
+    xp = _pad_rows(x2d, tile_blocks)
+    ep = _pad_rows(e2d, tile_blocks)
+    rp = _pad_rows(rnd, tile_blocks)
+    lp = _pad_rows(low, tile_blocks)
+    grid = (xp.shape[0] // tile_blocks,)
+    bspec = pl.BlockSpec((tile_blocks, block), lambda i: (i, 0))
+    sspec = pl.BlockSpec((tile_blocks, 1), lambda i: (i, 0))
+    w, r = pl.pallas_call(
+        _flat_ef_kernel,
+        grid=grid,
+        in_specs=[bspec, bspec, sspec, sspec],
+        out_specs=[bspec, bspec],
+        out_shape=[jax.ShapeDtypeStruct(xp.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(xp.shape, jnp.float32)],
+        interpret=interpret,
+    )(xp, ep, rp, lp)
+    return w[:nb], r[:nb]
+
+
+def flat_ef_plane(plane, residual, rnd_blocks, low_blocks, *,
+                  block: int = BLOCK, use_pallas: bool = True,
+                  fused: bool = True, interpret: bool | None = None):
+    """Fused EF encode of one whole (..., M) payload plane — the flat
+    path's ONE device-side sync kernel (M must be a multiple of ``block``;
+    FlatSpace slot alignment guarantees it, so blocks never straddle leaves
+    or workers and every real element lands in exactly the block the
+    per-leaf encode would put it in).
+
+    ``rnd_blocks``/``low_blocks`` are (M // block, 1) per-block sidecars
+    for ONE plane row; they are tiled across the leading axes here.
+    ``fused=False`` composes the same numerics from the three-pass
+    quantize/dequantize pipeline (bitwise identical — the bench/debug
+    fallback, still one collective). Returns (wire_plane, new_residual),
+    both fp32 shaped like ``plane``.
+    """
+    shape = plane.shape
+    assert shape[-1] % block == 0, (shape, block)
+    lead = 1
+    for d in shape[:-1]:
+        lead *= d
+    x2d = plane.reshape(-1, block)
+    e2d = residual.reshape(-1, block)
+    rnd = jnp.tile(jnp.asarray(rnd_blocks, jnp.float32), (lead, 1))
+    low = jnp.tile(jnp.asarray(low_blocks, jnp.float32), (lead, 1))
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if fused and use_pallas:
+        w2d, r2d = flat_ef_blocks(x2d, e2d, rnd, low, block=block,
+                                  interpret=interpret)
+    elif fused:
+        from repro.kernels.ref import flat_ef_blocks_ref
+        w2d, r2d = flat_ef_blocks_ref(x2d, e2d, rnd, low)
+    else:
+        # three-pass composition over the same blocked view (mirrors the
+        # generic ef_apply path, incl. its separately-materialized v̂)
+        from repro.kernels.quantize import dequantize_blocks, quantize_blocks
+        from repro.kernels.ref import (dequantize_blocks_ref,
+                                       quantize_blocks_ref)
+        v = x2d + e2d
+        if use_pallas:
+            q, s = quantize_blocks(v, interpret=interpret)
+            vhat = dequantize_blocks(q, s, interpret=interpret)
+        else:
+            q, s = quantize_blocks_ref(v)
+            vhat = dequantize_blocks_ref(q, s)
+        from repro.kernels.tiling import round_through_bf16
+        vhat = jnp.maximum(vhat, low)
+        w2d = jnp.where(rnd > 0, round_through_bf16(vhat), vhat)
+        r2d = v - w2d
+    return w2d.reshape(shape), r2d.reshape(shape)

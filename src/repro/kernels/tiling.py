@@ -1,0 +1,74 @@
+"""Shared padding / blocked-view helpers for the Pallas kernels.
+
+Every kernel in this package tiles flat payloads the same way: pad the
+leading (row) axis to a grid-tile multiple, or flatten an arbitrary leaf to
+``(nblocks, block)`` rows that never straddle the leading per-worker axes.
+These helpers used to live in ``kernels/quantize.py`` (with
+``kernels/sync_fused.py`` and ``kernels/adaalter_update.py`` each carrying
+their own variants); they are now shared here so the row/block layout — the
+thing the bitwise guarantees between the per-leaf and flat paths hinge on —
+is defined exactly once.
+
+``quantize.py`` re-exports ``_pad_rows``/``_to_blocks``/``_from_blocks`` as
+aliases for back-compat with existing imports.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+LANES = 128               # native VPU lane width: last axis of every tile
+
+
+def pad_rows(a, tile: int):
+    """Zero-pad axis 0 of ``a`` up to a multiple of ``tile`` rows."""
+    pad = (-a.shape[0]) % tile
+    return jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1)) if pad else a
+
+
+def to_blocks(x, block: int, batch_ndim: int):
+    """Flatten to (nblocks, block), zero-padded; blocks never straddle the
+    leading ``batch_ndim`` axes (the per-worker payload boundary)."""
+    lead = 1
+    for d in x.shape[:batch_ndim]:
+        lead *= d
+    flat = x.reshape(lead, -1) if batch_ndim else x.reshape(1, -1)
+    pad = (-flat.shape[1]) % block
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    return flat.reshape(-1, block)
+
+
+def from_blocks(y2d, shape, batch_ndim: int):
+    """Inverse of :func:`to_blocks`: strip the per-lead padding and restore
+    ``shape``. The one place the blocked layout is decoded — the quantize
+    pair, the fused EF kernel and the flat-plane packer all go through it."""
+    lead = 1
+    for d in shape[:batch_ndim]:
+        lead *= d
+    body = 1
+    for d in shape[batch_ndim:]:
+        body *= d
+    return y2d.reshape(lead, -1)[:, :body].reshape(shape)
+
+
+def padded_size(n: int, align: int) -> int:
+    """``n`` rounded up to a multiple of ``align`` (elements)."""
+    return n + (-n) % align
+
+
+def round_through_bf16(x):
+    """Nearest-bfloat16 value of fp32 ``x``, as fp32 — and guaranteed to
+    STAY rounded.
+
+    The flat-plane paths keep bf16 leaves as fp32 planes and encode the
+    per-step rounding as a convert chain; XLA's excess-precision
+    simplification (on by default) is allowed to drop exactly that chain
+    when it fuses into a larger program, silently keeping fp32 values the
+    per-leaf layout would have rounded — half-ulp drift that breaks the
+    bitwise contract. The optimization barrier pins the bf16 intermediate
+    so the simplifier cannot see through it. (The Pallas kernels don't need
+    this: a ``pallas_call`` body is opaque to the XLA simplifier.)
+    """
+    import jax
+    return jax.lax.optimization_barrier(
+        x.astype(jnp.bfloat16)).astype(jnp.float32)

@@ -59,7 +59,7 @@ OPT_FLAGS = dict(attn_tp_pad=True, attn_remat=True, fused_xent=True,
 def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool,
                 opt_name: str = "local_adaalter", H: int = 4,
                 compression: str = "", verbose: bool = True,
-                optimized: bool = False) -> Dict[str, Any]:
+                optimized: bool = False, flat: bool = False) -> Dict[str, Any]:
     """Lower+compile one (arch, shape, mesh); return the roofline record(s).
 
     ``compression`` selects the sync wire codec. The compiled sync_step then
@@ -84,7 +84,8 @@ def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool,
     records = []
 
     if shape.kind == "train":
-        opt_cfg = OptimizerConfig(name=opt_name, H=H, compression=compression)
+        opt_cfg = OptimizerConfig(name=opt_name, H=H, compression=compression,
+                                  flat=flat)
         plan = resolve_plan(cfg, mesh, optimizer=opt_name)
         # remat="save_tp" was tried and REFUTED on qwen2-7b (§Perf iter 3):
         # -1.0s collective, +6.9s memory. But remat="full" for small
@@ -107,6 +108,16 @@ def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool,
             variants = [("local_step", programs.local_step)]
             if programs.is_local:
                 variants.append(("sync_step", programs.sync_step))
+            # launch/latency (alpha-beta) model of one sync round issued
+            # per-leaf (one small collective per payload leaf) vs as the
+            # flat plane's single collective — the dispatch-layer overhead
+            # the flat parameter plane removes (core/flatspace.py)
+            from repro.core import comm
+            n_leaves = (programs.flatspace.n_leaves if programs.flatspace
+                        is not None
+                        else len(jax.tree_util.tree_leaves(abstract[0])))
+            per_leaf_colls = int(
+                n_leaves * comm.sync_round_multiplier(opt_name))
             for vname, fn in variants:
                 lowered = fn.lower(params, opt_state, batch)
                 compiled = lowered.compile()
@@ -118,11 +129,28 @@ def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool,
                 # compare against the measured HLO collective bytes above
                 modeled = (engine.round_bytes(n_params)
                            if vname == "sync_step" else 0.0)
+                coll_model = None
+                if vname == "sync_step":
+                    R_ = programs.n_workers
+                    coll_model = {
+                        "n_payload_leaves": n_leaves,
+                        "per_leaf": {
+                            "n_collectives": per_leaf_colls,
+                            "time_s": comm.collective_time(
+                                modeled, per_leaf_colls, R_,
+                                cross_pod=multi_pod)},
+                        "flat": {
+                            "n_collectives": 1,
+                            "time_s": comm.collective_time(
+                                modeled, 1, R_, cross_pod=multi_pod)},
+                    }
                 rec.update(variant=vname, plan=dataclasses.asdict(plan),
                            n_workers=programs.n_workers, H=programs.H,
                            optimizer=opt_name,
                            compression=opt_cfg.compression,
+                           flat=flat,
                            modeled_sync_payload_bytes=modeled,
+                           sync_collective_model=coll_model,
                            memory_analysis=str(compiled.memory_analysis()),
                            compile_s=round(time.time() - t0, 1))
                 records.append(rec)
@@ -181,6 +209,11 @@ def main() -> None:
     ap.add_argument("--out", default="", help="directory for per-pair JSON records")
     ap.add_argument("--optimized", action="store_true",
                     help="apply the beyond-paper perf flags (§Perf '+opt')")
+    ap.add_argument("--flat", action="store_true",
+                    help="compile the flat-parameter-plane step builders "
+                         "(core/flatspace.py): one update launch + one sync "
+                         "collective; records carry the per-leaf vs flat "
+                         "alpha-beta collective model either way")
     args = ap.parse_args()
 
     archs = (ASSIGNED if args.arch == "assigned"
@@ -198,7 +231,8 @@ def main() -> None:
                     result = dryrun_pair(arch, shape_name, multi_pod=multi_pod,
                                          opt_name=args.optimizer, H=args.H,
                                          compression=args.compress,
-                                         optimized=args.optimized)
+                                         optimized=args.optimized,
+                                         flat=args.flat)
                     n_ok += 1
                     if args.out:
                         os.makedirs(args.out, exist_ok=True)

@@ -120,7 +120,15 @@ def _staleness_stat(grads, anchor):
 
 @dataclasses.dataclass
 class TrainPrograms:
-    """Jitted step functions + their input sharding pytrees."""
+    """Jitted step functions + their input sharding pytrees.
+
+    With ``OptimizerConfig.flat`` the params/opt_state the step functions
+    exchange are FlatSpace planes (core/flatspace.py) instead of per-leaf
+    pytrees; the adapter fields below let the train loop translate between
+    the two layouts (checkpoint restores work across them in both
+    directions) — they are populated whenever the run COULD have a flat
+    twin (local Local AdaAlter), not only when ``flat`` is on.
+    """
     init_fn: Any                 # (rng) -> (params, opt_state)
     local_step: Any              # (params, opt_state, batch) -> (params, opt_state, metrics)
     sync_step: Any               # same signature; includes the H-th-step averaging
@@ -130,6 +138,12 @@ class TrainPrograms:
     n_workers: int
     is_local: bool
     H: int
+    is_flat: bool = False
+    flatspace: Any = None        # FlatSpace geometry (local_adaalter runs)
+    legacy_abstract: Any = None  # (params, opt_state) per-leaf ShapeDtypeStructs
+    flat_abstract: Any = None    # (plane, flat_state) ShapeDtypeStructs
+    to_flat: Any = None          # per-leaf (params, opt_state) -> planes
+    to_legacy: Any = None        # planes -> per-leaf (params, opt_state)
 
 
 def build_train_programs(cfg: ModelConfig, shape: ShapeConfig,
@@ -165,6 +179,19 @@ def build_train_programs(cfg: ModelConfig, shape: ShapeConfig,
         abstract = jax.eval_shape(raw_init, jax.random.PRNGKey(0))
     p_sh = param_shardings(rules, abstract[0], with_workers=local)
     s_sh = opt_state_shardings(rules, abstract[1], p_sh, with_workers=local)
+
+    # FlatSpace adapters exist for every run that could have a flat twin
+    # (so either layout can restore the other's checkpoints); the flat
+    # STEP functions are a separate build below.
+    flat_ok = local and opt_cfg.name == "local_adaalter"
+    if opt_cfg.flat and not flat_ok:
+        raise ValueError(
+            "OptimizerConfig.flat requires a local Local AdaAlter run "
+            f"(got optimizer={opt_cfg.name!r}, local={local})")
+    fs = None
+    if flat_ok:
+        from repro.core import flatspace as fsp
+        fs = fsp.FlatSpace.build(abstract[0], batch_ndim=1)
 
     # Two-stage init. The RNG draw compiles UNSHARDED: letting GSPMD partition
     # the threefry computation changes the drawn values whenever a
@@ -274,11 +301,181 @@ def build_train_programs(cfg: ModelConfig, shape: ShapeConfig,
     local_step = jax.jit(partial(step, do_sync=False), **common)
     sync_step = jax.jit(partial(step, do_sync=True), **common)
 
+    # ---------------- flat-plane rebuild (OptimizerConfig.flat) ----------- #
+    flat_fields = {}
+    if fs is not None:
+        from repro.core import flatspace as fsp
+        flat_fields = dict(
+            flatspace=fs, legacy_abstract=abstract,
+            flat_abstract=fsp.flat_abstract(fs, abstract[0], abstract[1]),
+            to_flat=lambda p_, s_: (fs.pack(p_), fsp.pack_opt_state(fs, s_)),
+            to_legacy=lambda pl_, st_: (fs.unpack(pl_),
+                                        fsp.unpack_opt_state(fs, st_)))
+    if opt_cfg.flat:
+        init_fn, local_step, sync_step, p_sh, s_sh = _flat_programs(
+            fs, opt_cfg, mesh, plan, R, abstract, _expand, _draw, vworker,
+            b_sh)
+
     return TrainPrograms(
         init_fn=init_fn, local_step=local_step, sync_step=sync_step,
         batch_sharding=b_sh, param_sharding=p_sh, opt_sharding=s_sh,
         n_workers=R, is_local=local,
-        H=getattr(opt, "H", 1) if opt_lib.is_local(opt) else 1)
+        H=getattr(opt, "H", 1) if opt_lib.is_local(opt) else 1,
+        is_flat=opt_cfg.flat, **flat_fields)
+
+
+# --------------------------------------------------------------------------- #
+# flat-plane step builders (OptimizerConfig.flat; core/flatspace.py)
+# --------------------------------------------------------------------------- #
+def _flat_programs(fs, opt_cfg: OptimizerConfig, mesh, plan, R: int,
+                   abstract, _expand, _draw, vworker, b_sh):
+    """Local AdaAlter over FlatSpace planes: the whole per-step update is
+    ONE Pallas launch over the packed plane (vs one per leaf), and the sync
+    round is ONE fused EF kernel + ONE all-reduce of a single flat wire
+    array (vs 2·L small collectives). Given the same schedule the train
+    STATE is bitwise identical to the per-leaf path — both with
+    ``use_pallas`` (kernel vs kernel) and without (the jnp fallbacks mirror
+    each other's cast orders); pinned by tests/test_flat_step.py. Derived
+    scalars (loss, the adaptive drift statistic below — computed over the
+    plane rather than leaf-by-leaf) are reduction-order-dependent and may
+    differ in ulps between the two compiled programs, so an adaptive
+    schedule can diverge at a threshold edge; fixed_h cannot.
+
+    Returns ``(init_fn, local_step, sync_step, p_sh, s_sh)`` where the
+    state layout is (plane, {scalars + per-state planes}).
+    """
+    import numpy as np
+
+    from repro.core.flatspace import (SCALAR_STATE_KEYS, mean_planes,
+                                      pack_opt_state)
+    from repro.core.sync_engine import drift_statistic
+    from repro.kernels.adaalter_update import LANES as _LANES
+    from repro.kernels.ops import on_tpu
+
+    if opt_cfg.eps <= 0:
+        raise ValueError("flat mode requires eps > 0: the zero slot padding "
+                         "must stay zero through rsqrt(B² + t'·ε²)")
+    sync_cfg = opt_cfg.sync
+    psize = fs.plane_size
+    lossless = sync_cfg.compression in ("", "fp32")
+    block = sync_cfg.block
+    if psize % block or fs.align % block:
+        raise ValueError(f"sync block {block} must divide the FlatSpace "
+                         f"alignment {fs.align}")
+    # sidecars, built once: where the plane must round through bf16, and
+    # the per-block lower clamp of the [params ‖ B²] sync payload
+    elems = fs.round16_elems()                               # (P,) bool
+    upd_rnd_rows = np.tile(fs.rows_sidecar(elems, _LANES), (R, 1))
+    sync_rnd_elems = np.concatenate([elems, np.zeros(psize, np.bool_)])
+    sync_rnd_blocks = fs.rows_sidecar(sync_rnd_elems, block)
+    f32min = float(jnp.finfo(jnp.float32).min)
+    sync_low_elems = np.concatenate(
+        [np.full(psize, f32min, np.float32), np.zeros(psize, np.float32)])
+    sync_low_blocks = sync_low_elems.reshape(-1, block)[:, :1]
+    stat = drift_statistic(sync_cfg)
+    staleness = stat == "grad_staleness"
+
+    w_entry = _axes_entry(tuple(plan.local_axes))
+    plane_sh = NamedSharding(mesh, P(w_entry, None))
+    scalar_sh = NamedSharding(mesh, P(w_entry))
+    p_sh = plane_sh
+    s_sh = {k: (scalar_sh if k in SCALAR_STATE_KEYS else plane_sh)
+            for k in abstract[1]}
+
+    def _expand_flat(base):
+        params, state = _expand(base)
+        return fs.pack(params), pack_opt_state(fs, state)
+
+    _place = jax.jit(_expand_flat, out_shardings=(p_sh, s_sh))
+
+    def init_fn(rng):
+        return _place(_draw(rng))
+
+    def flat_sync(new_plane, new_state):
+        """Alg. 4 lines 11-12 over the packed payload — one wire array."""
+        payload = jnp.concatenate([new_plane, new_state["b2_local"]], -1)
+        new_res = None
+        if lossless:
+            wire = payload
+        elif sync_cfg.compression == "int8":
+            from repro.kernels.sync_fused import flat_ef_plane
+            res = jnp.concatenate([new_state["res_params"],
+                                   new_state["res_b2"]], -1)
+            wire, new_res = flat_ef_plane(
+                payload, res, sync_rnd_blocks, sync_low_blocks, block=block,
+                use_pallas=opt_cfg.use_pallas, fused=sync_cfg.fused)
+        else:   # bf16 wire: elementwise EF roundtrip, same bits per leaf
+            from repro.kernels.tiling import round_through_bf16
+            res = jnp.concatenate([new_state["res_params"],
+                                   new_state["res_b2"]], -1)
+            v = payload + res
+            # the codec truncates EVERY payload (B² included); the wire
+            # cast then re-rounds only the bf16 param slots (a no-op)
+            vq = jnp.maximum(round_through_bf16(v),
+                             jnp.asarray(sync_low_elems))
+            wire = jnp.where(jnp.asarray(sync_rnd_elems),
+                             round_through_bf16(vq), vq)
+            new_res = v - wire
+        mean = mean_planes(wire, sync_rnd_elems)       # the ONE collective
+        b2m = mean[..., psize:]
+        out_state = {**new_state,
+                     "tprime": jnp.zeros_like(new_state["tprime"]),
+                     "b2_sync": b2m, "b2_local": b2m}
+        if new_res is not None:
+            out_state["res_params"] = new_res[..., :psize]
+            out_state["res_b2"] = new_res[..., psize:]
+        return mean[..., :psize], out_state
+
+    def step(plane, fstate, batch, *, do_sync: bool):
+        loss, metrics, grads = vworker(fs.unpack(plane), batch)
+        applied = grads
+        if opt_cfg.grad_clip > 0:
+            applied, _ = opt_lib.clip_by_global_norm(
+                grads, opt_cfg.grad_clip, batch_ndim=1)
+        a_plane = fs.pack(applied)
+        # the drift statistics must see RAW gradients (same contract as the
+        # per-leaf fused path); with clipping off the packed plane is both
+        g_plane = (a_plane if (not staleness or opt_cfg.grad_clip <= 0)
+                   else fs.pack(grads))
+        step_no = fstate["step"] + 1
+        tprime = fstate["tprime"] + 1
+        eta = opt_lib.warmup_lr(opt_cfg.lr, step_no[0], opt_cfg.warmup_steps)
+        extra = tprime[0].astype(jnp.float32) * opt_cfg.eps ** 2
+        if opt_cfg.use_pallas:
+            from repro.kernels.adaalter_update import flat_fused_update
+            new_plane, new_b2 = flat_fused_update(
+                plane, a_plane, fstate["b2_sync"], fstate["b2_local"],
+                eta, extra, jnp.asarray(upd_rnd_rows),
+                interpret=not on_tpu())
+        else:
+            from repro.kernels.ref import flat_fused_update_ref
+            new_plane, new_b2 = flat_fused_update_ref(
+                plane, a_plane, fstate["b2_sync"], fstate["b2_local"],
+                eta, extra, jnp.asarray(elems))
+        new_state = {**fstate, "step": step_no, "tprime": tprime,
+                     "b2_local": new_b2}
+        out_metrics = {"loss": jnp.mean(loss),
+                       **{k: jnp.mean(v) for k, v in metrics.items()}}
+        if staleness:
+            delta = g_plane - fstate["g_anchor"]
+            d2 = jnp.sum(jnp.square(delta), axis=-1)
+            g2 = jnp.sum(jnp.square(g_plane), axis=-1)
+            out_metrics["drift"] = jnp.mean(d2 / (g2 + 1e-12))
+        elif stat is not None:
+            d = jnp.sqrt(jnp.sum(jnp.square(new_plane - plane), -1))
+            pn = jnp.sqrt(jnp.sum(jnp.square(plane), -1))
+            out_metrics["drift"] = jnp.mean(d / (pn + 1e-12))
+        if do_sync:
+            new_plane, new_state = flat_sync(new_plane, new_state)
+            if staleness:
+                new_state = {**new_state, "g_anchor": g_plane}
+        return new_plane, new_state, out_metrics
+
+    common = dict(in_shardings=(p_sh, s_sh, b_sh),
+                  out_shardings=(p_sh, s_sh, None),
+                  donate_argnums=(0, 1))
+    return (init_fn, jax.jit(partial(step, do_sync=False), **common),
+            jax.jit(partial(step, do_sync=True), **common), p_sh, s_sh)
 
 
 # --------------------------------------------------------------------------- #

@@ -110,25 +110,49 @@ def train_loop(cfg: ModelConfig, shape: ShapeConfig, opt_cfg: OptimizerConfig,
         if checkpoint_dir:
             from repro.checkpoint import (checkpoint_keys, latest_step,
                                           restore_checkpoint)
+            from repro.core.flatspace import is_flat_checkpoint
             if latest_step(checkpoint_dir) is not None:
-                abstract = jax.eval_shape(lambda: (params, opt_state))
+                keys = checkpoint_keys(checkpoint_dir)
                 # Pre-SyncState checkpoints are (params, opt_state)
                 # 2-tuples; pick the template matching the on-disk manifest
                 # so the adaptive window just re-anchors for those, while a
                 # genuinely mismatched checkpoint (different arch/worker
                 # count) still fails with its real shape/key error.
-                legacy = not any(k.startswith("#2/")
-                                 for k in checkpoint_keys(checkpoint_dir))
-                like = (abstract if legacy
+                no_ss = not any(k.startswith("#2/") for k in keys)
+                # A checkpoint written under either parameter layout
+                # restores into either mode: the manifest says which layout
+                # is on disk (packed planes vs per-leaf pytrees), and the
+                # programs' FlatSpace adapters convert after the restore.
+                disk_flat = is_flat_checkpoint(keys)
+                if disk_flat == programs.is_flat:
+                    abstract = jax.eval_shape(lambda: (params, opt_state))
+                elif disk_flat:
+                    if programs.flat_abstract is None:
+                        raise ValueError(
+                            "checkpoint holds a flat parameter plane but "
+                            "this run has no FlatSpace (flat layout is "
+                            "local Local AdaAlter only)")
+                    abstract = programs.flat_abstract
+                else:
+                    abstract = programs.legacy_abstract
+                like = (abstract if no_ss
                         else (*abstract, engine.export_state()))
                 state, start_step = restore_checkpoint(checkpoint_dir, like)
-                if legacy:
+                if no_ss:
                     params, opt_state = state
                 else:
                     params, opt_state, sync_state = state
+                if disk_flat and not programs.is_flat:
+                    params, opt_state = programs.to_legacy(params, opt_state)
+                elif programs.is_flat and not disk_flat:
+                    params, opt_state = programs.to_flat(params, opt_state)
                 if verbose:
+                    layout = ""
+                    if disk_flat != programs.is_flat:
+                        layout = (" (flat -> per-leaf)" if disk_flat
+                                  else " (per-leaf -> flat)")
                     print(f"restored checkpoint at step {start_step}"
-                          f"{' (no SyncState)' if legacy else ''}")
+                          f"{' (no SyncState)' if no_ss else ''}{layout}")
         engine.reset(start_step)
         if sync_state is not None:
             engine.import_state(sync_state)
@@ -244,6 +268,17 @@ def main() -> None:
                     help="route the fused AdaAlter update and the sync "
                          "codec through the Pallas kernels (interpret mode "
                          "off-TPU, Mosaic on TPU)")
+    ap.add_argument("--flat", action="store_true",
+                    help="flat parameter plane (core/flatspace.py): pack "
+                         "params + optimizer state into contiguous planes "
+                         "at init; the AdaAlter step becomes ONE kernel "
+                         "launch and the sync round ONE kernel + ONE "
+                         "collective instead of per-leaf ones. Train state "
+                         "is bitwise identical to the per-leaf layout under "
+                         "the same schedule (adaptive drift scalars, like "
+                         "loss, may differ in ulps and shift a threshold-"
+                         "edge sync); checkpoints restore across both "
+                         "layouts")
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--iid", action="store_true", help="disable non-IID workers")
@@ -263,7 +298,8 @@ def main() -> None:
                    compression=args.compress,
                    fused=not args.unfused_sync),
         name=args.optimizer, lr=args.lr, H=args.H,
-        warmup_steps=args.warmup, use_pallas=args.use_pallas)
+        warmup_steps=args.warmup, use_pallas=args.use_pallas,
+        flat=args.flat)
     sched = (f"H={args.H}" if args.sync_policy == "fixed_h" else
              f"adaptive(thr={args.sync_threshold}, "
              f"h=[{args.h_min},{args.h_max or 4 * args.H}])")

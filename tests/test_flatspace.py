@@ -1,0 +1,193 @@
+"""FlatSpace geometry: pack/unpack round-trips, buckets, sidecars, adapters.
+
+The flat parameter plane (core/flatspace.py) may only ever be a LAYOUT
+change: packing any architecture's parameter tree into the plane and
+unpacking it back must reproduce every leaf bit-for-bit, dtype included —
+across dtype buckets (bf16 params next to fp32 norms), worker-stacked
+leaves, and the optimizer-state adapters the checkpoint round-trips use.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.core.flatspace import (FlatSpace, flat_abstract,
+                                  is_flat_checkpoint, mean_planes,
+                                  pack_opt_state, unpack_opt_state)
+from repro.models import build_model
+
+#: one member of each structural family the ISSUE calls out (LSTM,
+#: dense transformer, SSM, MoE) plus the hybrid for good measure.
+ARCHS = ["biglstm", "qwen2-7b", "mamba2-370m", "phi3.5-moe-42b-a6.6b"]
+
+
+def _params(arch):
+    cfg = reduced(get_arch(arch), vocab=128)
+    return build_model(cfg).init(jax.random.PRNGKey(0))
+
+
+def _assert_tree_bitwise(a, b):
+    fa, ta = jax.tree_util.tree_flatten(a)
+    fb, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb
+    for x, y in zip(fa, fb):
+        assert x.dtype == y.dtype and x.shape == y.shape
+        np.testing.assert_array_equal(
+            np.asarray(x.astype(jnp.float32)),
+            np.asarray(y.astype(jnp.float32)))
+
+
+# --------------------------------------------------------------------------- #
+# pack/unpack round-trip, every architecture family
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("arch", ARCHS)
+def test_pack_unpack_bitwise_roundtrip(arch):
+    params = _params(arch)
+    fs = FlatSpace.build(params, batch_ndim=0)
+    plane = fs.pack(params)
+    assert plane.dtype == jnp.float32
+    assert plane.shape == (fs.plane_size,)
+    assert fs.plane_size % fs.align == 0
+    _assert_tree_bitwise(params, fs.unpack(plane))
+
+
+def test_pack_unpack_worker_stacked():
+    """Leaves with a leading (R,) worker axis round-trip per worker."""
+    params = _params("biglstm")
+    R = 3
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (R,) + x.shape), params)
+    fs = FlatSpace.build(stacked, batch_ndim=1)
+    plane = fs.pack(stacked)
+    assert plane.shape == (R, fs.plane_size)
+    _assert_tree_bitwise(stacked, fs.unpack(plane))
+    # each worker row is that worker's own plane
+    fs0 = FlatSpace.build(params, batch_ndim=0)
+    np.testing.assert_array_equal(np.asarray(plane[1]),
+                                  np.asarray(fs0.pack(params)))
+
+
+def test_unpack_dtype_override_for_state_planes():
+    """b2/residual planes share the param geometry but stay fp32."""
+    params = _params("qwen2-7b")
+    fs = FlatSpace.build(params, batch_ndim=0)
+    b2 = jax.tree_util.tree_map(
+        lambda p: jnp.full(p.shape, 2.0, jnp.float32), params)
+    out = fs.unpack(fs.pack(b2), dtype=jnp.float32)
+    _assert_tree_bitwise(b2, out)
+
+
+# --------------------------------------------------------------------------- #
+# layout properties: buckets, alignment, sidecars
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("arch", ARCHS)
+def test_dtype_buckets_are_contiguous(arch):
+    fs = FlatSpace.build(_params(arch), batch_ndim=0)
+    ranges = fs.bucket_ranges()
+    names = [n for n, _, _ in ranges]
+    assert len(names) == len(set(names)), f"split buckets: {names}"
+    assert ranges[0][1] == 0 and ranges[-1][2] == fs.plane_size
+    for (_, _, stop), (_, start, _) in zip(ranges, ranges[1:]):
+        assert stop == start
+    # slots aligned -> every slot offset is a whole number of tiles
+    for slot in fs.slots:
+        assert slot.offset % fs.align == 0
+        assert slot.padded % fs.align == 0
+
+
+def test_round16_sidecars_follow_slot_dtypes():
+    fs = FlatSpace.build(_params("biglstm"), batch_ndim=0)
+    elems = fs.round16_elems()
+    assert elems.shape == (fs.plane_size,)
+    for slot in fs.slots:
+        seg = elems[slot.offset:slot.offset + slot.padded]
+        want = jnp.dtype(slot.dtype).itemsize == 2
+        assert seg.all() == want and seg.any() == want
+    rows = FlatSpace.rows_sidecar(elems, 128)
+    assert rows.shape == (fs.plane_size // 128, 1)
+    np.testing.assert_array_equal(rows[:, 0] > 0, elems[::128])
+
+
+def test_pad_accounting():
+    fs = FlatSpace.build(_params("biglstm"), batch_ndim=0)
+    assert fs.pad_elems == fs.plane_size - fs.n_real
+    assert fs.n_real == sum(s.size for s in fs.slots)
+    assert fs.n_leaves == len(jax.tree_util.tree_leaves(_params("biglstm")))
+
+
+def test_non_float_leaves_rejected():
+    with pytest.raises(ValueError, match="non-float"):
+        FlatSpace.build({"a": jnp.zeros((4,), jnp.int32)})
+
+
+# --------------------------------------------------------------------------- #
+# the single-collective mean
+# --------------------------------------------------------------------------- #
+def test_mean_planes_matches_per_leaf_bf16_mean():
+    """The identity the ONE-collective flat sync leans on: jnp.mean over a
+    bf16 leaf accumulates in fp32 and rounds the quotient — exactly what
+    mean_planes' fp32 mean + bf16 re-round computes."""
+    R, n = 8, 4099
+    x16 = (jax.random.normal(jax.random.PRNGKey(0), (R, n), jnp.float32)
+           .astype(jnp.bfloat16))
+
+    @jax.jit
+    def per_leaf(x):
+        return jnp.mean(x, axis=0, keepdims=True).astype(jnp.float32)
+
+    @jax.jit
+    def flat(x32):
+        return mean_planes(x32, np.ones(n, np.bool_))
+
+    np.testing.assert_array_equal(
+        np.asarray(jnp.broadcast_to(per_leaf(x16), (R, n))),
+        np.asarray(flat(x16.astype(jnp.float32))))
+
+
+def test_mean_planes_f32_passthrough():
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 515), jnp.float32)
+    m = mean_planes(x, np.zeros(515, np.bool_))
+    np.testing.assert_array_equal(
+        np.asarray(m),
+        np.asarray(jnp.broadcast_to(jnp.mean(x, axis=0, keepdims=True),
+                                    x.shape)))
+
+
+# --------------------------------------------------------------------------- #
+# optimizer-state adapters (checkpoint round-trips)
+# --------------------------------------------------------------------------- #
+def test_opt_state_adapters_roundtrip():
+    params = _params("biglstm")
+    fs = FlatSpace.build(params, batch_ndim=0)
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    state = {"step": jnp.zeros((), jnp.int32),
+             "tprime": jnp.ones((), jnp.int32),
+             "b2_sync": jax.tree_util.tree_map(lambda z: z + 1.5, zeros),
+             "b2_local": jax.tree_util.tree_map(lambda z: z + 2.5, zeros),
+             "res_params": zeros}
+    flat = pack_opt_state(fs, state)
+    assert flat["step"] is state["step"]          # scalars pass through
+    assert flat["b2_sync"].shape == (fs.plane_size,)
+    back = unpack_opt_state(fs, flat)
+    for k in ("b2_sync", "b2_local", "res_params"):
+        _assert_tree_bitwise(state[k], back[k])
+
+
+def test_flat_abstract_matches_packed_shapes():
+    params = _params("biglstm")
+    fs = FlatSpace.build(params, batch_ndim=0)
+    state = {"step": jnp.zeros((), jnp.int32),
+             "b2_local": jax.tree_util.tree_map(
+                 lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+    plane_abs, state_abs = flat_abstract(fs, params, state)
+    packed = pack_opt_state(fs, state)
+    assert plane_abs.shape == fs.pack(params).shape
+    assert state_abs["b2_local"].shape == packed["b2_local"].shape
+    assert state_abs["step"].shape == state["step"].shape
+
+
+def test_is_flat_checkpoint_key_detection():
+    assert is_flat_checkpoint(["#0", "#1/step", "#1/b2_local"])
+    assert not is_flat_checkpoint(["#0/embed", "#1/step", "#2/since"])
