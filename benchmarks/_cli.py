@@ -1,0 +1,21 @@
+"""Shared CLI scaffold for the bench modules.
+
+Every ``bench_*`` module exposes a uniform ``--out`` JSON path (defaulting
+to ``BENCH_<name>.json`` at the repo root, ``''`` skips); this is the one
+place the print-rows + write-JSON contract lives.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List
+
+
+def emit(rows: List[Dict], out: str) -> None:
+    """Print the result rows and (unless ``out`` is empty) write them as
+    JSON to ``out``."""
+    for r in rows:
+        print(r)
+    if out:
+        with open(out, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"wrote {out}")

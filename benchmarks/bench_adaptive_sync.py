@@ -23,7 +23,6 @@ rather than riding either bound.
 from __future__ import annotations
 
 import argparse
-import json
 from typing import Dict, List
 
 from repro.configs import OptimizerConfig, ShapeConfig, get_arch, reduced
@@ -117,18 +116,15 @@ def main() -> None:
     ap.add_argument("--h-max", type=int, default=16)
     ap.add_argument("--compress", nargs="?", const="int8", default="",
                     choices=["", *CODEC_NAMES])
-    ap.add_argument("--out", default="", help="write rows as JSON here")
+    ap.add_argument("--out", default="BENCH_adaptive_sync.json",
+                    help="write rows as JSON here ('' skips)")
     args = ap.parse_args()
     rows = run(steps=args.steps, threshold=args.threshold, h_min=args.h_min,
                h_max=args.h_max,
                staleness_threshold=args.staleness_threshold,
                compression=args.compress)
-    for r in rows:
-        print(r)
-    if args.out:
-        with open(args.out, "w") as f:
-            json.dump(rows, f, indent=1)
-        print(f"wrote {args.out}")
+    from benchmarks._cli import emit
+    emit(rows, args.out)
 
 
 if __name__ == "__main__":

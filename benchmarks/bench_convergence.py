@@ -41,3 +41,19 @@ def run(steps: int = 120, seq: int = 64, batch: int = 8,
             "steps": steps,
         })
     return rows
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--out", default="BENCH_convergence.json",
+                    help="write rows as JSON here ('' skips)")
+    args = ap.parse_args()
+    rows = run(steps=args.steps)
+    from benchmarks._cli import emit
+    emit(rows, args.out)
+
+
+if __name__ == "__main__":
+    main()

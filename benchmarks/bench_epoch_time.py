@@ -46,3 +46,18 @@ def run(workers_list=(1, 2, 4, 8, 16, 32), cross_pod_at: int = 16) -> List[Dict]
                 "throughput_samples_s": round(n * BATCH_PER_WORKER / t, 1),
             })
     return rows
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_epoch_time.json",
+                    help="write rows as JSON here ('' skips)")
+    args = ap.parse_args()
+    rows = run()
+    from benchmarks._cli import emit
+    emit(rows, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -22,12 +22,11 @@ paper's Big LSTM config:
                are bitwise identical in state; tests/test_flat_step.py).
 
   PYTHONPATH=src python -m benchmarks.bench_flat_step \
-      [--steps 20] [--out benchmarks/bench_flat_step.json]
+      [--steps 20] [--out BENCH_flat_step.json]
 """
 from __future__ import annotations
 
 import argparse
-import json
 import time
 from typing import Dict, List
 
@@ -188,15 +187,12 @@ def main() -> None:
                     help="wall-time section train steps")
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--out", default="", help="write rows as JSON here")
+    ap.add_argument("--out", default="BENCH_flat_step.json",
+                    help="write rows as JSON here ('' skips)")
     args = ap.parse_args()
     rows = run(steps=args.steps, seq=args.seq, batch=args.batch)
-    for r in rows:
-        print(r)
-    if args.out:
-        with open(args.out, "w") as f:
-            json.dump(rows, f, indent=1)
-        print(f"wrote {args.out}")
+    from benchmarks._cli import emit
+    emit(rows, args.out)
 
 
 if __name__ == "__main__":

@@ -88,3 +88,20 @@ def run(n: int = 1 << 22) -> List[Dict]:
     } for m, t, b in [("fused(jit)", t_fused, cost_f.bytes),
                       ("unfused(jit,auto-fused)", t_unfused, cost_u.bytes),
                       ("unfused(eager,materialized)", t_eager, eager_bytes)]]
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=1 << 22,
+                    help="update payload elements")
+    ap.add_argument("--out", default="BENCH_kernels.json",
+                    help="write rows as JSON here ('' skips)")
+    args = ap.parse_args()
+    rows = run(n=args.n)
+    from benchmarks._cli import emit
+    emit(rows, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -39,3 +39,20 @@ def run(records_dir: str = "") -> List[Dict]:
                 "mfu_at_roofline": round(rec["mfu_at_roofline"], 4),
             })
     return rows
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--records-dir", default="",
+                    help=f"dry-run record directory (default {DEFAULT_DIR})")
+    ap.add_argument("--out", default="BENCH_roofline.json",
+                    help="write rows as JSON here ('' skips)")
+    args = ap.parse_args()
+    rows = run(records_dir=args.records_dir)
+    from benchmarks._cli import emit
+    emit(rows, args.out)
+
+
+if __name__ == "__main__":
+    main()

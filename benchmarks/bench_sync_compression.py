@@ -19,12 +19,11 @@ Four measurements for the int8 + error-feedback sync path
                the 200-step synthetic non-IID stream (acceptance: within 5%).
 
   PYTHONPATH=src python -m benchmarks.bench_sync_compression \
-      [--steps 60] [--n 4194304] [--out benchmarks/sync_compression.json]
+      [--steps 60] [--n 4194304] [--out BENCH_sync_compression.json]
 """
 from __future__ import annotations
 
 import argparse
-import json
 import time
 from typing import Dict, List
 
@@ -151,15 +150,12 @@ def main() -> None:
                     help="convergence-section train steps")
     ap.add_argument("--n", type=int, default=1 << 22,
                     help="kernel/fused-round payload elements")
-    ap.add_argument("--out", default="", help="write rows as JSON here")
+    ap.add_argument("--out", default="BENCH_sync_compression.json",
+                    help="write rows as JSON here ('' skips)")
     args = ap.parse_args()
     rows = run(steps=args.steps, n=args.n)
-    for r in rows:
-        print(r)
-    if args.out:
-        with open(args.out, "w") as f:
-            json.dump(rows, f, indent=1)
-        print(f"wrote {args.out}")
+    from benchmarks._cli import emit
+    emit(rows, args.out)
 
 
 if __name__ == "__main__":

@@ -8,18 +8,26 @@
   bench_sync_compression  int8+error-feedback sync vs fp32 payload
   bench_adaptive_sync     CADA-style adaptive sync policy vs fixed H=4
   bench_flat_step    flat parameter plane vs per-leaf hot path
+  bench_trace_replay trace-driven what-if replay vs measured walls
   bench_roofline     §Roofline table from the dry-run artifacts
+
+Every module is also runnable standalone with a uniform ``--out`` JSON path
+defaulting to ``BENCH_<name>.json`` at the repo root; this harness writes
+the same per-bench files (plus the merged CSV), so one ``benchmarks.run``
+invocation refreshes the whole ``BENCH_*.json`` trajectory.
 """
 from __future__ import annotations
 
 import argparse
 import csv
 import io
+import json
+import os
 import sys
 import time
 
 ALL = ["epoch_time", "convergence", "kernels", "sync_compression",
-       "adaptive_sync", "flat_step", "roofline"]
+       "adaptive_sync", "flat_step", "trace_replay", "roofline"]
 
 
 def main() -> None:
@@ -27,6 +35,9 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help=f"comma-separated subset of {ALL}")
     ap.add_argument("--csv", default="", help="also write rows to this CSV")
+    ap.add_argument("--json-dir", default=".",
+                    help="write per-bench rows as BENCH_<name>.json here "
+                         "('' disables)")
     ap.add_argument("--quick", action="store_true",
                     help="smaller step counts (CI mode)")
     args = ap.parse_args()
@@ -38,29 +49,45 @@ def main() -> None:
         print(f"== bench_{name}", flush=True)
         if name == "epoch_time":
             from benchmarks.bench_epoch_time import run as r
-            rows += r()
+            new = r()
         elif name == "convergence":
             from benchmarks.bench_convergence import run as r
-            rows += r(steps=30 if args.quick else 120)
+            new = r(steps=30 if args.quick else 120)
         elif name == "kernels":
             from benchmarks.bench_kernels import run as r
-            rows += r(n=(1 << 18) if args.quick else (1 << 22))
+            new = r(n=(1 << 18) if args.quick else (1 << 22))
         elif name == "sync_compression":
             from benchmarks.bench_sync_compression import run as r
-            rows += r(steps=60 if args.quick else 200,
-                      n=(1 << 18) if args.quick else (1 << 22))
+            new = r(steps=60 if args.quick else 200,
+                    n=(1 << 18) if args.quick else (1 << 22))
         elif name == "adaptive_sync":
             from benchmarks.bench_adaptive_sync import run as r
-            rows += r(steps=60 if args.quick else 120)
+            new = r(steps=60 if args.quick else 120)
         elif name == "flat_step":
             from benchmarks.bench_flat_step import run as r
-            rows += r(steps=12 if args.quick else 30)
+            new = r(steps=12 if args.quick else 30)
+        elif name == "trace_replay":
+            from benchmarks.bench_trace_replay import run as r
+            new = r(steps=24 if args.quick else 40)
         elif name == "roofline":
             from benchmarks.bench_roofline import run as r
-            rows += r()
+            new = r()
         else:
             print(f"   unknown bench {name!r}", file=sys.stderr)
             continue
+        rows += new
+        if args.json_dir:
+            # the artifact name is the module's contract (DEFAULT_OUT where
+            # it differs from the BENCH_<name>.json convention), so the
+            # harness can never drift from the standalone CLI
+            import importlib
+            mod = importlib.import_module(f"benchmarks.bench_{name}")
+            os.makedirs(args.json_dir, exist_ok=True)
+            out = os.path.join(args.json_dir,
+                               getattr(mod, "DEFAULT_OUT",
+                                       f"BENCH_{name}.json"))
+            with open(out, "w") as f:
+                json.dump(new, f, indent=1)
         print(f"   done in {time.time() - t0:.1f}s ({len(rows)} rows total)",
               flush=True)
 

@@ -16,6 +16,15 @@ class FabricModel:
     dcn_bw: float = 6.25e9            # cross-pod, per chip
     latency: float = 20e-6
 
+    def scaled(self, bw_scale: float = 1.0,
+               latency_scale: float = 1.0) -> "FabricModel":
+        """A fabric with the bandwidths (and optionally latency) scaled —
+        the trace replay's one-knob "slower interconnect" what-if
+        (``repro.trace.replay.ReplayKnobs.bw_scale``)."""
+        return dataclasses.replace(self, ici_bw=self.ici_bw * bw_scale,
+                                   dcn_bw=self.dcn_bw * bw_scale,
+                                   latency=self.latency * latency_scale)
+
     def allreduce_time(self, bytes_per_replica: float, n: int,
                        cross_pod: bool = False) -> float:
         """Ring all-reduce: 2*(n-1)/n * bytes over the slowest link —
@@ -103,6 +112,17 @@ def collective_time(n_bytes: float, n_collectives: int, n_workers: int,
     collectives (per-leaf: one per payload leaf; flat plane: one)."""
     return fabric.collective_time(n_bytes, n_collectives, n_workers,
                                   cross_pod)
+
+
+def round_collectives(algorithm: str, n_payload_leaves: int,
+                      flat: bool = False) -> int:
+    """Collectives ONE sync round issues: the flat plane all-reduces a
+    single packed wire array; the per-leaf path pays one all-reduce per
+    payload leaf x the algorithm's round multiplier. The single source the
+    SyncEngine, the dry-run record and the trace replay all share."""
+    if flat:
+        return 1
+    return max(1, int(n_payload_leaves * sync_round_multiplier(algorithm)))
 
 
 def sync_round_multiplier(algorithm: str) -> float:

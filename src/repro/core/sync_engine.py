@@ -246,6 +246,34 @@ class SyncEngine:
             int(n_params * comm.sync_round_multiplier(self.algorithm)),
             fused=fused, block=self.block)
 
+    def round_collectives(self, n_payload_leaves: int, *,
+                          flat: bool = False) -> int:
+        """Collectives ONE sync round issues: the flat plane all-reduces a
+        single packed wire array; the per-leaf path pays one all-reduce per
+        payload leaf (x the algorithm's round multiplier). This is the
+        ``n_collectives`` the alpha-beta fabric model charges latency for,
+        and what the trace recorder stamps on ``collective`` spans."""
+        return comm.round_collectives(self.algorithm, n_payload_leaves,
+                                      flat=flat)
+
+    def modeled_encode_hbm_bytes(self, n_params: int) -> float:
+        """Modeled device-side HBM traffic of one sync round's EF encode,
+        for ANY codec — the trace recorder's ``ef_encode`` span model
+        (unlike :meth:`encode_hbm_bytes`, which answers only for the int8
+        quantize pipeline it models exactly).
+
+        int8  -> the fused/unfused pipeline model (``comm.ef_sync_hbm_bytes``)
+        bf16  -> one EF pass over the payload: read x + residual, write the
+                 re-rounded wire + new residual (fp32 master copies: 16n)
+        fp32  -> 0 (lossless: no encode runs at all)
+        """
+        if self.codec.name == "int8":
+            return self.encode_hbm_bytes(n_params)
+        n = int(n_params * comm.sync_round_multiplier(self.algorithm))
+        if self.codec.name == "bf16":
+            return 16.0 * n
+        return 0.0
+
     def __repr__(self) -> str:
         return (f"SyncEngine(policy={self.policy.name!r}, "
                 f"codec={self.codec.name!r}, H={self.H}, "

@@ -59,7 +59,8 @@ OPT_FLAGS = dict(attn_tp_pad=True, attn_remat=True, fused_xent=True,
 def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool,
                 opt_name: str = "local_adaalter", H: int = 4,
                 compression: str = "", verbose: bool = True,
-                optimized: bool = False, flat: bool = False) -> Dict[str, Any]:
+                optimized: bool = False, flat: bool = False,
+                recorder=None) -> Dict[str, Any]:
     """Lower+compile one (arch, shape, mesh); return the roofline record(s).
 
     ``compression`` selects the sync wire codec. The compiled sync_step then
@@ -113,12 +114,10 @@ def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool,
             # flat plane's single collective — the dispatch-layer overhead
             # the flat parameter plane removes (core/flatspace.py)
             from repro.core import comm
-            n_leaves = (programs.flatspace.n_leaves if programs.flatspace
-                        is not None
-                        else len(jax.tree_util.tree_leaves(abstract[0])))
-            per_leaf_colls = int(
-                n_leaves * comm.sync_round_multiplier(opt_name))
+            n_leaves = programs.n_payload_leaves
+            per_leaf_colls = comm.round_collectives(opt_name, n_leaves)
             for vname, fn in variants:
+                t_compile0 = recorder.now() if recorder is not None else 0.0
                 lowered = fn.lower(params, opt_state, batch)
                 compiled = lowered.compile()
                 rep = analyze(compiled, arch=arch, shape_name=shape_name,
@@ -154,11 +153,40 @@ def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool,
                            memory_analysis=str(compiled.memory_analysis()),
                            compile_s=round(time.time() - t0, 1))
                 records.append(rec)
+                if recorder is not None:
+                    # one timeline entry per compiled variant: the measured
+                    # compile wall, the roofline-modeled step time, and (for
+                    # sync_step) the alpha-beta wire model per layout
+                    t_now = recorder.now()
+                    tag = f"{arch}/{shape_name}/{mesh_name}"
+                    recorder.add("eval", step=len(records) - 1,
+                                 t0=t_compile0, dur=t_now - t_compile0,
+                                 pair=tag, variant=vname, phase="compile")
+                    modeled_step = (max(rec["t_compute_s"],
+                                        rec["t_memory_s"])
+                                    + rec["t_collective_s"])
+                    recorder.add("local_step", step=len(records) - 1,
+                                 t0=t_now, dur=modeled_step, modeled=True,
+                                 pair=tag, variant=vname,
+                                 t_compute_s=rec["t_compute_s"],
+                                 t_memory_s=rec["t_memory_s"],
+                                 t_collective_s=rec["t_collective_s"],
+                                 dominant=rec["dominant"])
+                    if coll_model is not None:
+                        layout = "flat" if flat else "per_leaf"
+                        m = coll_model[layout]
+                        recorder.add("collective", step=len(records) - 1,
+                                     t0=t_now + modeled_step,
+                                     dur=m["time_s"], modeled=True,
+                                     pair=tag, variant=vname, layout=layout,
+                                     wire_bytes=modeled,
+                                     n_collectives=m["n_collectives"])
                 if verbose:
                     print(f"  [{vname}] {rep.summary()}")
                     print(f"  [{vname}] mem: {compiled.memory_analysis()}")
     else:
         plan = serve_plan(cfg, mesh)
+        t_compile0 = recorder.now() if recorder is not None else 0.0
         with mesh:
             programs = build_serve_programs(cfg, shape, mesh, plan)
             specs = serve_batch_specs(cfg, shape)
@@ -183,6 +211,21 @@ def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool,
                        memory_analysis=str(compiled.memory_analysis()),
                        compile_s=round(time.time() - t0, 1))
             records.append(rec)
+            if recorder is not None:
+                t_now = recorder.now()
+                tag = f"{arch}/{shape_name}/{mesh_name}"
+                recorder.add("eval", step=len(records) - 1, t0=t_compile0,
+                             dur=t_now - t_compile0, pair=tag,
+                             variant=vname, phase="compile")
+                modeled_step = (max(rec["t_compute_s"], rec["t_memory_s"])
+                                + rec["t_collective_s"])
+                recorder.add("local_step", step=len(records) - 1, t0=t_now,
+                             dur=modeled_step, modeled=True, pair=tag,
+                             variant=vname,
+                             t_compute_s=rec["t_compute_s"],
+                             t_memory_s=rec["t_memory_s"],
+                             t_collective_s=rec["t_collective_s"],
+                             dominant=rec["dominant"])
             if verbose:
                 print(f"  [{vname}] {rep.summary()}")
                 print(f"  [{vname}] mem: {compiled.memory_analysis()}")
@@ -207,6 +250,9 @@ def main() -> None:
                          "modeled_sync_payload_bytes next to the measured "
                          "HLO collective bytes")
     ap.add_argument("--out", default="", help="directory for per-pair JSON records")
+    ap.add_argument("--trace", default="", metavar="OUT.json",
+                    help="record compile walls + roofline-modeled step/wire "
+                         "spans across all pairs as a repro.trace timeline")
     ap.add_argument("--optimized", action="store_true",
                     help="apply the beyond-paper perf flags (§Perf '+opt')")
     ap.add_argument("--flat", action="store_true",
@@ -221,6 +267,14 @@ def main() -> None:
     shapes = sorted(SHAPES) if args.shape == "all" else [args.shape]
     meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
 
+    recorder = None
+    if args.trace:
+        from repro.trace import TraceRecorder
+        recorder = TraceRecorder(meta={
+            "kind": "dryrun", "optimizer": args.optimizer, "H": args.H,
+            "compression": args.compress, "flat": args.flat,
+            "clock": "perf_counter"})
+
     n_ok = n_fail = 0
     for arch in archs:
         for shape_name in shapes:
@@ -232,7 +286,7 @@ def main() -> None:
                                          opt_name=args.optimizer, H=args.H,
                                          compression=args.compress,
                                          optimized=args.optimized,
-                                         flat=args.flat)
+                                         flat=args.flat, recorder=recorder)
                     n_ok += 1
                     if args.out:
                         os.makedirs(args.out, exist_ok=True)
@@ -245,6 +299,9 @@ def main() -> None:
                 except Exception:
                     n_fail += 1
                     print(f"   FAIL: {tag}\n{traceback.format_exc()}", flush=True)
+    if recorder is not None:
+        recorder.save(args.trace)
+        print(f"wrote trace {args.trace} ({len(recorder.spans)} spans)")
     print(f"\ndry-run complete: {n_ok} ok, {n_fail} failed")
     if n_fail:
         raise SystemExit(1)

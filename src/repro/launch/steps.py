@@ -138,6 +138,10 @@ class TrainPrograms:
     n_workers: int
     is_local: bool
     H: int
+    n_payload_leaves: int = 0    # param leaves one sync round touches (the
+                                 # per-leaf path issues one collective per
+                                 # leaf x the algorithm's round multiplier;
+                                 # the flat plane issues ONE regardless)
     is_flat: bool = False
     flatspace: Any = None        # FlatSpace geometry (local_adaalter runs)
     legacy_abstract: Any = None  # (params, opt_state) per-leaf ShapeDtypeStructs
@@ -321,6 +325,7 @@ def build_train_programs(cfg: ModelConfig, shape: ShapeConfig,
         batch_sharding=b_sh, param_sharding=p_sh, opt_sharding=s_sh,
         n_workers=R, is_local=local,
         H=getattr(opt, "H", 1) if opt_lib.is_local(opt) else 1,
+        n_payload_leaves=len(jax.tree_util.tree_leaves(abstract[0])),
         is_flat=opt_cfg.flat, **flat_fields)
 
 

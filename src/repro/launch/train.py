@@ -17,7 +17,10 @@ single-HBM-pass Pallas kernel unless ``--unfused-sync``. Checkpoints carry
 the engine's ``SyncState`` (drift accumulator + window position) next to
 ``(params, opt_state)``, so a mid-window restore resumes the exact adaptive
 schedule. ``TrainResult`` reports the *measured* sync count/steps and the
-comm bytes they moved, not the static ``2P/H`` formula.
+comm bytes they moved, not the static ``2P/H`` formula. ``--trace out.json``
+additionally records the run as a per-worker span timeline (``repro.trace``)
+— the engine's actual sync decisions plus modeled device/wire round costs —
+for Perfetto viewing and trace-driven what-if replay.
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --reduced \
       --optimizer local_adaalter --H 4 --steps 200 --batch 16 --seq 128
@@ -41,6 +44,7 @@ import numpy as np
 from repro.configs import (ARCHS, OptimizerConfig, ShapeConfig, get_arch,
                            get_shape, reduced)
 from repro.configs.base import ModelConfig, ParallelismPlan, TrainConfig
+from repro.core import comm
 from repro.core.codecs import CODEC_NAMES
 from repro.core.sync_engine import DRIFT_METRICS, make_sync_engine
 from repro.core.sync_policy import POLICY_NAMES
@@ -88,7 +92,14 @@ def train_loop(cfg: ModelConfig, shape: ShapeConfig, opt_cfg: OptimizerConfig,
                *, steps: int = 100, seed: int = 0, log_every: int = 10,
                mesh=None, plan: Optional[ParallelismPlan] = None,
                non_iid: bool = True, checkpoint_dir: str = "",
-               checkpoint_every: int = 0, verbose: bool = True) -> TrainResult:
+               checkpoint_every: int = 0, verbose: bool = True,
+               trace_out: str = "") -> TrainResult:
+    """``trace_out`` records the run as a span stream (``repro.trace``):
+    one timeline row per worker per step carrying the sync decisions the
+    engine actually took, plus modeled device/wire costs on sync rounds —
+    the input of the what-if replay engine and the Chrome/Perfetto export.
+    All host times (including ``wall_s``) share the monotonic
+    ``time.perf_counter`` clock."""
     mesh = mesh or make_cpu_mesh()
     plan = plan or resolve_plan(cfg, mesh, optimizer=opt_cfg.name)
     with mesh:
@@ -156,32 +167,98 @@ def train_loop(cfg: ModelConfig, shape: ShapeConfig, opt_cfg: OptimizerConfig,
         engine.reset(start_step)
         if sync_state is not None:
             engine.import_state(sync_state)
+        n_params = count_params(cfg)
+
+        # ---- trace recorder (repro.trace): spans + modeled round costs ---- #
+        recorder = None
+        if trace_out:
+            from repro.roofline import V5E
+            from repro.trace import TraceRecorder
+            n_coll = engine.round_collectives(programs.n_payload_leaves,
+                                              flat=programs.is_flat)
+            round_b = engine.round_bytes(n_params)
+            # modeled device-side encode + wire time of ONE sync round —
+            # attached to every round's ef_encode/collective spans (a CPU
+            # host cannot measure the TPU-side pass or a real fabric)
+            enc_bytes = engine.modeled_encode_hbm_bytes(n_params)
+            enc_t = enc_bytes / V5E.hbm_bw
+            wire_t = comm.collective_time(round_b, n_coll, R)
+            st0 = engine.export_state()
+            recorder = TraceRecorder(meta={
+                "kind": "train", "arch": cfg.name,
+                "algorithm": opt_cfg.name, "n_params": int(n_params),
+                "n_workers": R, "steps": steps, "start_step": start_step,
+                "H": programs.H, "is_local": programs.is_local,
+                "flat": programs.is_flat,
+                "sync": dataclasses.asdict(opt_cfg.sync),
+                "use_pallas": opt_cfg.use_pallas,
+                "n_payload_leaves": programs.n_payload_leaves,
+                "n_collectives_per_round": n_coll,
+                "fabric": dataclasses.asdict(comm.FabricModel()),
+                "hbm_bw": V5E.hbm_bw, "clock": "perf_counter",
+                "sync_state0": {"since": int(st0.since),
+                                "drift": float(st0.drift)},
+            })
+
         losses, ppls = [], []
-        t0 = time.time()
+        t0 = time.perf_counter()
         for step in range(start_step, steps):
             batch_np = make_train_batch(cfg, shape, ds, step,
                                         n_workers=R if programs.is_local else 0)
             batch = jax.tree_util.tree_map(jnp.asarray, batch_np)
             do_sync = engine.want_sync(step)
+            t_step = recorder.now() if recorder is not None else 0.0
             fn = programs.sync_step if do_sync else programs.local_step
             params, opt_state, metrics = fn(params, opt_state, batch)
+            # the blocking metric read keeps the device work inside the span
             loss = float(metrics["loss"])
+            drift_val = (float(metrics.get("drift", 0.0))
+                         if engine.wants_drift else 0.0)
+            # decision-time window state (before observe folds this step in)
+            st = engine.export_state() if recorder is not None else None
             engine.observe(step, do_sync,
-                           {"drift": float(metrics.get("drift", 0.0))}
+                           {"drift": drift_val}
                            if engine.wants_drift else None)
+            if recorder is not None:
+                dur = recorder.now() - t_step
+                t_end = t_step + dur
+                for w in range(R):
+                    recorder.add("local_step", worker=w, step=step,
+                                 t0=t_step, dur=dur, synced=do_sync,
+                                 loss=loss, drift=drift_val,
+                                 sync_since=int(st.since),
+                                 sync_drift=float(st.drift))
+                    if do_sync:
+                        recorder.add("ef_encode", worker=w, step=step,
+                                     t0=t_end, dur=enc_t, modeled=True,
+                                     hbm_bytes=enc_bytes,
+                                     codec=engine.codec.name)
+                        recorder.add("collective", worker=w, step=step,
+                                     t0=t_end + enc_t, dur=wire_t,
+                                     modeled=True, wire_bytes=round_b,
+                                     n_collectives=n_coll,
+                                     codec=engine.codec.name, workers=R)
             losses.append(loss)
             ppls.append(math.exp(min(loss, 30.0)))
             if verbose and (step % log_every == 0 or step == steps - 1):
+                t_ev = recorder.now() if recorder is not None else 0.0
                 print(f"step {step:5d} loss {loss:8.4f} ppl {ppls[-1]:10.2f} "
                       f"{'sync' if do_sync else 'local'}")
+                if recorder is not None:
+                    recorder.add("eval", step=step, t0=t_ev,
+                                 dur=recorder.now() - t_ev, loss=loss)
             if checkpoint_dir and checkpoint_every and \
                     (step + 1) % checkpoint_every == 0:
                 from repro.checkpoint import save_checkpoint
+                t_ck = recorder.now() if recorder is not None else 0.0
                 save_checkpoint(checkpoint_dir, step + 1,
                                 (params, opt_state, engine.export_state()))
+                if recorder is not None:
+                    recorder.add("ckpt", step=step, t0=t_ck,
+                                 dur=recorder.now() - t_ck,
+                                 dir=checkpoint_dir)
 
-        wall = time.time() - t0
-        n_params = count_params(cfg)
+        wall = time.perf_counter() - t0
         executed = max(steps - start_step, 0)
         # Measured comm: what the schedule that actually ran moved — the
         # engine's sync count times its per-round codec payload (for local
@@ -204,6 +281,15 @@ def train_loop(cfg: ModelConfig, shape: ShapeConfig, opt_cfg: OptimizerConfig,
         # steps actually executed and guard the empty-run case (restore at or
         # past the target used to yield steps=target and a NaN-mean warning).
         final = float(np.mean(losses[-10:])) if losses else float("nan")
+        if recorder is not None:
+            recorder.meta["measured"] = {
+                "wall_s": wall, "sync_count": engine.sync_count,
+                "sync_steps": list(engine.sync_steps), "final_loss": final}
+            recorder.save(trace_out)
+            if verbose:
+                print(f"wrote trace {trace_out} ({len(recorder.spans)} "
+                      f"spans; python -m repro.trace.chrome {trace_out} "
+                      f"to view, python -m repro.trace.replay for what-ifs)")
         return TrainResult(losses=losses, ppl=ppls, steps=executed,
                            n_workers=R,
                            comm_bytes_per_step=total / executed if executed
@@ -279,6 +365,12 @@ def main() -> None:
                          "loss, may differ in ulps and shift a threshold-"
                          "edge sync); checkpoints restore across both "
                          "layouts")
+    ap.add_argument("--trace", default="", metavar="OUT.json",
+                    help="record the run as a span timeline (repro.trace): "
+                         "per-worker per-step spans with the engine's sync "
+                         "decisions + modeled device/wire costs. Export "
+                         "with `python -m repro.trace.chrome`, what-if "
+                         "replay with `python -m repro.trace.replay`")
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--iid", action="store_true", help="disable non-IID workers")
@@ -309,7 +401,8 @@ def main() -> None:
           f"on {jax.device_count()} device(s)")
     res = train_loop(cfg, shape, opt_cfg, steps=args.steps, seed=args.seed,
                      non_iid=not args.iid, checkpoint_dir=args.checkpoint_dir,
-                     checkpoint_every=args.checkpoint_every)
+                     checkpoint_every=args.checkpoint_every,
+                     trace_out=args.trace)
     print(f"done in {res.wall_s:.1f}s; final loss {res.final_loss:.4f}; "
           f"{res.sync_count} syncs in {res.steps} steps; measured comm/step "
           f"{res.comm_bytes_per_step / 1e6:.1f} MB (modeled "

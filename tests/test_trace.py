@@ -1,0 +1,371 @@
+"""Trace subsystem: schema round-trips (JSON + Chrome export) are lossless,
+replay is deterministic and reproduces the measured sync schedule exactly
+for fixed_h and adaptive runs, and the what-if sweeps produce monotone
+curves."""
+import dataclasses
+import json
+
+import pytest
+
+from repro.configs import OptimizerConfig, ShapeConfig, get_arch, reduced
+from repro.configs.base import SyncConfig
+from repro.core import comm
+from repro.trace import SPAN_KINDS, Span, Trace, TraceRecorder
+from repro.trace.chrome import from_chrome, to_chrome
+from repro.trace.replay import (ReplayKnobs, replay, sweep_H, sweep_codecs,
+                                sweep_workers, validate)
+
+SHAPE = ShapeConfig(name="trace", seq_len=32, global_batch=8, kind="train")
+STEPS = 16
+
+
+def _traced_run(policy, tmpdir, **sync_kw):
+    from repro.launch.train import train_loop
+    cfg = reduced(get_arch("biglstm"), vocab=128)
+    sync = SyncConfig(policy=policy, **sync_kw)
+    opt = OptimizerConfig.from_sync(sync, name="local_adaalter", lr=0.5,
+                                    H=3, warmup_steps=5)
+    path = str(tmpdir / f"trace_{policy}.json")
+    res = train_loop(cfg, SHAPE, opt, steps=STEPS, verbose=False,
+                     trace_out=path)
+    return res, Trace.load(path)
+
+
+@pytest.fixture(scope="module")
+def fixed_h_run(tmp_path_factory):
+    return _traced_run("fixed_h", tmp_path_factory.mktemp("fixed"))
+
+
+@pytest.fixture(scope="module")
+def adaptive_run(tmp_path_factory):
+    return _traced_run("adaptive", tmp_path_factory.mktemp("adaptive"),
+                       threshold=0.002, h_min=2, h_max=6)
+
+
+# --------------------------------------------------------------------------- #
+# schema
+# --------------------------------------------------------------------------- #
+def test_recorder_rejects_unknown_span_kind():
+    rec = TraceRecorder()
+    with pytest.raises(ValueError, match="unknown span kind"):
+        rec.add("not_a_kind", t0=0.0, dur=1.0)
+
+
+def test_trace_json_roundtrip_lossless(fixed_h_run):
+    _, trace = fixed_h_run
+    d = trace.to_dict()
+    again = Trace.from_dict(json.loads(json.dumps(d)))
+    assert again.to_dict() == d
+
+
+def test_trace_version_gate():
+    with pytest.raises(ValueError, match="schema version"):
+        Trace.from_dict({"version": 999, "meta": {}, "spans": []})
+
+
+def test_span_stream_shape(fixed_h_run):
+    res, trace = fixed_h_run
+    assert all(s.name in SPAN_KINDS for s in trace.spans)
+    steps = trace.by_name("local_step")
+    # one step span per worker per step
+    assert len(steps) == res.n_workers * STEPS
+    # the engine's actual decisions ride the spans
+    synced = sorted({s.step for s in steps if s.args["synced"]})
+    assert synced == res.sync_steps
+    # modeled round costs attached on every sync round
+    colls = trace.by_name("collective")
+    assert sorted({s.step for s in colls}) == res.sync_steps
+    assert all(s.modeled and s.args["wire_bytes"] > 0 for s in colls)
+    # spans share one rebased monotonic clock
+    assert min(s.t0 for s in trace.spans) >= 0.0
+    assert trace.meta["clock"] == "perf_counter"
+
+
+def test_adaptive_trace_records_drift_stream(adaptive_run):
+    _, trace = adaptive_run
+    drifts = [s.args["drift"] for s in trace.by_name("local_step")]
+    assert any(d > 0 for d in drifts)
+
+
+# --------------------------------------------------------------------------- #
+# Chrome export
+# --------------------------------------------------------------------------- #
+def test_chrome_roundtrip_lossless(adaptive_run):
+    _, trace = adaptive_run
+    doc = to_chrome(trace)
+    # the export itself must be JSON-serializable
+    again = from_chrome(json.loads(json.dumps(doc)))
+    assert again.to_dict() == trace.to_dict()
+
+
+def test_chrome_has_rows_and_flow_arrows(fixed_h_run):
+    res, trace = fixed_h_run
+    evs = to_chrome(trace)["traceEvents"]
+    names = {e["args"]["name"] for e in evs if e.get("ph") == "M"
+             and e["name"] == "process_name"}
+    assert names == {f"worker {w}" for w in trace.workers}
+    flows = [e for e in evs if e.get("ph") in ("s", "f")]
+    # one start + one finish arrow per worker per sync round
+    assert len(flows) == 2 * res.n_workers * res.sync_count
+
+
+# --------------------------------------------------------------------------- #
+# replay
+# --------------------------------------------------------------------------- #
+def test_replay_deterministic_bit_identical(adaptive_run):
+    _, trace = adaptive_run
+    knobs = ReplayKnobs(fabric=comm.FabricModel(), n_workers=16, codec="int8")
+    a, b = replay(trace, knobs), replay(trace, knobs)
+    assert a.to_dict() == b.to_dict()
+    base_a, base_b = replay(trace), replay(trace)
+    assert base_a.to_dict() == base_b.to_dict()
+
+
+@pytest.mark.parametrize("which", ["fixed_h", "adaptive"])
+def test_replayed_schedule_equals_measured(which, fixed_h_run, adaptive_run):
+    res, trace = fixed_h_run if which == "fixed_h" else adaptive_run
+    r = replay(trace)
+    assert r.sync_count == res.sync_count
+    assert r.sync_steps == res.sync_steps
+
+
+@pytest.mark.parametrize("which", ["fixed_h", "adaptive"])
+def test_validate_gate_passes(which, fixed_h_run, adaptive_run):
+    _, trace = fixed_h_run if which == "fixed_h" else adaptive_run
+    # The baseline replay cancels exactly UNLESS scheduling noise makes the
+    # warm sync mean dip below the warm local mean (the >= 0 overhead
+    # clamp) — a few-sample-mean effect on a loaded CI box — so the
+    # bit-exactness claim is pinned on the hand-built traces below, and the
+    # live-run gate runs at the stated default tolerance.
+    v = validate(trace)
+    assert v["ok"], v
+
+
+def test_replay_h_knob_changes_schedule(fixed_h_run):
+    _, trace = fixed_h_run
+    every = replay(trace, ReplayKnobs(H=1, sync_policy="fixed_h"))
+    assert every.sync_count == STEPS
+    never = replay(trace, ReplayKnobs(H=STEPS + 1, sync_policy="fixed_h"))
+    assert never.sync_count == 0
+
+
+def test_replay_h_knob_on_adaptive_trace_switches_to_fixed_h(adaptive_run):
+    # a bare H knob must not be silently swallowed by the recorded
+    # adaptive policy (where H only seeds the h_max default)
+    _, trace = adaptive_run
+    every = replay(trace, ReplayKnobs(H=1))
+    assert every.policy == "fixed_h"
+    assert every.sync_count == STEPS
+
+
+def test_knobs_report_flat_false(fixed_h_run):
+    _, trace = fixed_h_run
+    r = replay(trace, ReplayKnobs(flat=False))
+    assert r.knobs == {"flat": False}
+
+
+def test_nonfinite_meta_survives_strict_json(tmp_path):
+    # --sync-threshold inf is a supported degenerate; Perfetto rejects the
+    # bare Infinity literal, so save/export must strict-JSON encode it
+    trace = _hand_trace()
+    trace.meta["sync"]["threshold"] = float("inf")
+    p = tmp_path / "inf.trace.json"
+    trace.save(str(p))
+    json.loads(p.read_text(), parse_constant=lambda s: pytest.fail(
+        f"non-RFC JSON literal {s} in saved trace"))
+    again = Trace.load(str(p))
+    assert again.meta["sync"]["threshold"] == float("inf")
+    doc = json.loads(json.dumps(to_chrome(trace)), parse_constant=lambda s:
+                     pytest.fail(f"non-RFC JSON literal {s} in export"))
+    assert from_chrome(doc).meta["sync"]["threshold"] == float("inf")
+
+
+def test_span_context_manager_records_on_exception():
+    rec = TraceRecorder()
+    with pytest.raises(RuntimeError):
+        with rec.span("eval", step=3, tag="x"):
+            raise RuntimeError("boom")
+    (s,) = rec.spans
+    assert s.name == "eval" and s.step == 3 and s.args["tag"] == "x"
+    assert s.dur >= 0.0
+
+
+def test_replay_threshold_knob_uses_drift_stream(adaptive_run):
+    res, trace = adaptive_run
+    # threshold 0 -> sync every h_min steps; inf -> every h_max
+    lo = replay(trace, ReplayKnobs(sync_threshold=0.0))
+    hi = replay(trace, ReplayKnobs(sync_threshold=float("inf")))
+    assert lo.sync_count >= hi.sync_count
+    assert lo.sync_count >= res.sync_count >= hi.sync_count
+
+
+def test_replay_baseline_has_no_wire_time(fixed_h_run):
+    _, trace = fixed_h_run
+    base = replay(trace)
+    assert base.comm_s == 0.0 and base.comm_fraction == 0.0
+    with_fabric = replay(trace, ReplayKnobs(fabric=comm.FabricModel(),
+                                            n_workers=8))
+    assert with_fabric.comm_s > 0.0
+    assert with_fabric.wall_s > base.wall_s
+
+
+def test_bw_scale_knob_slows_the_wire(fixed_h_run):
+    _, trace = fixed_h_run
+    fast = replay(trace, ReplayKnobs(bw_scale=1.0, n_workers=8))
+    slow = replay(trace, ReplayKnobs(bw_scale=0.1, n_workers=8))
+    assert slow.comm_s > fast.comm_s
+    # bw_scale composes with an explicit fabric instead of being ignored
+    fab = comm.FabricModel()
+    both = replay(trace, ReplayKnobs(fabric=fab, bw_scale=0.1, n_workers=8))
+    only = replay(trace, ReplayKnobs(fabric=fab, n_workers=8))
+    assert both.comm_s > only.comm_s
+
+
+def test_flat_knob_reduces_collective_count(fixed_h_run):
+    _, trace = fixed_h_run
+    per_leaf = replay(trace, ReplayKnobs(fabric=comm.FabricModel(),
+                                         n_workers=8, flat=False))
+    flat = replay(trace, ReplayKnobs(fabric=comm.FabricModel(),
+                                     n_workers=8, flat=True))
+    assert flat.n_collectives_per_round == 1
+    assert per_leaf.n_collectives_per_round > 1
+    assert flat.comm_s < per_leaf.comm_s
+
+
+# --------------------------------------------------------------------------- #
+# sweeps (the paper's curve shapes)
+# --------------------------------------------------------------------------- #
+def test_comm_fraction_monotone_in_workers(adaptive_run):
+    _, trace = adaptive_run
+    rows = sweep_workers(trace, (1, 2, 4, 8, 16, 32))
+    fracs = [r["comm_fraction"] for r in rows]
+    assert all(b >= a for a, b in zip(fracs, fracs[1:]))
+    assert fracs[0] == 0.0          # one worker: nothing to all-reduce
+
+
+def test_wall_monotone_in_H(fixed_h_run):
+    _, trace = fixed_h_run
+    rows = sweep_H(trace, (1, 2, 4, 8, 16))
+    walls = [r["wall_s"] for r in rows]
+    assert all(b <= a for a, b in zip(walls, walls[1:]))
+    assert rows[-1]["speedup_vs_first"] >= 1.0
+
+
+def test_codec_sweep_orders_wire_volume(fixed_h_run):
+    _, trace = fixed_h_run
+    rows = {r["codec"]: r for r in sweep_codecs(trace)}
+    assert rows["fp32"]["round_wire_bytes"] > rows["bf16"]["round_wire_bytes"]
+    assert rows["bf16"]["round_wire_bytes"] > rows["int8"]["round_wire_bytes"]
+    assert rows["fp32"]["comm_s"] >= rows["bf16"]["comm_s"] >= \
+        rows["int8"]["comm_s"]
+
+
+# --------------------------------------------------------------------------- #
+# replay math on a hand-built trace (no jax run)
+# --------------------------------------------------------------------------- #
+def _hand_trace():
+    rec = TraceRecorder(meta={
+        "kind": "train", "algorithm": "local_adaalter", "n_params": 1000,
+        "n_workers": 2, "steps": 6, "start_step": 0, "H": 3,
+        "is_local": True, "flat": False,
+        "sync": {"policy": "fixed_h", "threshold": 0.0, "h_min": 1,
+                 "h_max": 12, "compression": "", "block": 256},
+        "n_payload_leaves": 4,
+        "fabric": dataclasses.asdict(comm.FabricModel()),
+        "clock": "perf_counter",
+        "sync_state0": {"since": 0, "drift": 0.0},
+    })
+    t = 0.0
+    for step in range(6):
+        synced = (step + 1) % 3 == 0
+        dur = 3.0 if synced else 1.0          # sync overhead = 2.0
+        for w in range(2):
+            rec.add("local_step", worker=w, step=step, t0=t, dur=dur,
+                    synced=synced, loss=1.0, drift=0.5)
+        t += dur
+    trace = rec.freeze()
+    trace.meta["measured"] = {"wall_s": t, "sync_count": 2,
+                              "sync_steps": [2, 5]}
+    return trace
+
+
+def test_replay_rejects_dryrun_traces():
+    trace = _hand_trace()
+    trace.meta["kind"] = "dryrun"
+    with pytest.raises(ValueError, match="train trace"):
+        replay(trace)
+    with pytest.raises(ValueError, match="train trace"):
+        validate(trace)
+
+
+def test_hand_trace_baseline_is_exact():
+    trace = _hand_trace()
+    r = replay(trace)
+    assert r.wall_s == pytest.approx(10.0)      # 4x1 + 2x3
+    assert r.compute_s == pytest.approx(6.0)
+    assert r.sync_overhead_s == pytest.approx(4.0)
+    assert r.sync_steps == [2, 5]
+    assert validate(trace)["ok"]
+
+
+def test_hand_trace_h_knob_arithmetic():
+    trace = _hand_trace()
+    r = replay(trace, ReplayKnobs(H=6))
+    # one round instead of two: 6 x 1.0 compute + 1 x 2.0 overhead
+    assert r.sync_steps == [5]
+    assert r.wall_s == pytest.approx(8.0)
+
+
+def test_warm_estimates_exclude_compile_walls():
+    # step 0 and the first sync step carry jit-compile walls; a what-if
+    # schedule must charge replayed rounds the steady-state cost, and the
+    # validate gate must hold against the equally warm-corrected wall
+    rec = TraceRecorder(meta=_hand_trace().meta)
+    durs = [(0, False, 5.0), (1, False, 1.0), (2, True, 7.0),
+            (3, False, 1.0), (4, False, 1.0), (5, True, 3.0)]
+    t = 0.0
+    for step, synced, dur in durs:
+        for w in range(2):
+            rec.add("local_step", worker=w, step=step, t0=t, dur=dur,
+                    synced=synced, loss=1.0, drift=0.5)
+        t += dur
+    trace = rec.freeze()
+    trace.meta["measured"] = {"wall_s": t, "sync_count": 2,
+                              "sync_steps": [2, 5]}
+    # warm: compute 1.0/step, sync overhead 3.0 - 1.0 = 2.0 — compiles out
+    r = replay(trace, ReplayKnobs(H=6))
+    assert r.wall_s == pytest.approx(8.0)        # 6x1 + 1x2, no compile
+    v = validate(trace)
+    assert v["ok"] and v["ratio"] == pytest.approx(1.0)
+    assert v["measured_warm_wall_s"] == pytest.approx(10.0)
+    assert v["measured_span_wall_s"] == pytest.approx(18.0)
+
+
+def test_all_sync_trace_gate_excludes_compile():
+    # H=1: every step syncs, so there are NO local samples — the compute
+    # estimate must come from the warm sync walls, not the raw mean that
+    # folds step 0's jit-compile wall into every replayed step
+    rec = TraceRecorder(meta={**_hand_trace().meta, "H": 1})
+    t = 0.0
+    for step in range(12):
+        dur = 2.0 if step == 0 else 0.05       # step 0 = compile
+        for w in range(2):
+            rec.add("local_step", worker=w, step=step, t0=t, dur=dur,
+                    synced=True, loss=1.0, drift=0.0)
+        t += dur
+    trace = rec.freeze()
+    trace.meta["measured"] = {"wall_s": t, "sync_count": 12,
+                              "sync_steps": list(range(12))}
+    v = validate(trace)
+    assert v["ok"], v
+    assert v["ratio"] == pytest.approx(1.0)
+    assert v["measured_warm_wall_s"] == pytest.approx(12 * 0.05)
+
+
+def test_hand_trace_wire_term_matches_alpha_beta():
+    trace = _hand_trace()
+    fabric = comm.FabricModel()
+    r = replay(trace, ReplayKnobs(fabric=fabric, n_workers=8))
+    per_round = comm.sync_payload_bytes("local_adaalter", 1000)
+    expect = fabric.collective_time(per_round, 8, 8)    # 4 leaves x 2
+    assert r.comm_s == pytest.approx(2 * expect)
