@@ -21,6 +21,12 @@ paper's Big LSTM config:
                the reduced config, plus their final losses (the two paths
                are bitwise identical in state; tests/test_flat_step.py).
 
+  sharded      the same flat step on a 4-device (2 workers x 2-way shard)
+               CPU mesh (subprocess — the forced host-device count must
+               not perturb the single-device sections): kernel launches
+               sharded vs replicated, and per-device plane bytes, which
+               ~halve under 2-way sharding.
+
   PYTHONPATH=src python -m benchmarks.bench_flat_step \
       [--steps 20] [--out BENCH_flat_step.json]
 """
@@ -178,7 +184,85 @@ def run(steps: int = 20, seq: int = 64, batch: int = 8) -> List[Dict]:
             })
         rows[-1]["speedup_vs_per_leaf"] = round(
             walls["per_leaf"] / walls["flat"], 3)
+    rows.extend(run_sharded())
     return rows
+
+
+_SHARDED_SCRIPT = r"""
+import dataclasses, json
+import jax
+from repro.configs import OptimizerConfig, ShapeConfig, get_arch, reduced
+from repro.configs.base import SyncConfig
+from repro.launch.mesh import resolve_plan
+from repro.launch.steps import build_train_programs, train_batch_specs
+from benchmarks.bench_flat_step import count_pallas_calls, _mk_opt
+
+cfg = reduced(get_arch("biglstm"), vocab=512)
+shape = ShapeConfig(name="bench", seq_len=64, global_batch=8, kind="train")
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+out = {}
+with mesh:
+    plan = resolve_plan(cfg, mesh, optimizer="local_adaalter")
+    for mode, pl in (("sharded", plan),
+                     ("replicated", dataclasses.replace(plan, tp_axis=""))):
+        p = build_train_programs(cfg, shape, _mk_opt(True, True), mesh, pl)
+        state_abs = jax.eval_shape(p.init_fn, jax.random.PRNGKey(0))
+        batch_abs = train_batch_specs(cfg, shape, p.n_workers)
+        fs = p.flatspace
+        plane, _ = p.init_fn(jax.random.PRNGKey(0))
+        shard = plane.sharding.shard_shape(plane.shape)
+        out[mode] = {
+            "n_shards": p.n_shards,
+            "launches": {v: count_pallas_calls(jax.make_jaxpr(
+                lambda a, b, c, fn=fn: fn(a, b, c))(*state_abs, batch_abs))
+                for v, fn in (("local_step", p.local_step),
+                              ("sync_step", p.sync_step))},
+            "plane_size": fs.plane_size,
+            "per_device_plane_bytes": 4 * shard[0] * shard[1],
+        }
+print("BENCH-SHARDED " + json.dumps(out))
+"""
+
+
+def run_sharded() -> List[Dict]:
+    """Sharded-flat vs replicated-flat on a (2 workers x 2-way) mesh.
+
+    Runs in a subprocess: the XLA host-device count must be forced to 4
+    BEFORE the backend initialises, and doing so here would perturb the
+    single-device numbers of the sections above."""
+    import json
+    import os
+    import subprocess
+    import sys
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = {**os.environ, "JAX_PLATFORMS": "cpu",
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=4",
+           "PYTHONPATH": os.pathsep.join(
+               [repo, os.path.join(repo, "src")])}
+    try:
+        proc = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT],
+                              env=env, capture_output=True, text=True,
+                              timeout=900)
+        line = next(l for l in proc.stdout.splitlines()
+                    if l.startswith("BENCH-SHARDED "))
+        data = json.loads(line[len("BENCH-SHARDED "):])
+    except Exception as e:                       # keep the bench usable
+        return [{"bench": "flat_step(sharded)",
+                 "note": f"4-device subprocess failed: {e!r}"}]
+    sh, re_ = data["sharded"], data["replicated"]
+    return [{
+        "bench": "flat_step(sharded)",
+        "mesh": "2 workers x 2 shards",
+        "n_shards": sh["n_shards"],
+        "launches_sharded": sh["launches"],
+        "launches_replicated": re_["launches"],
+        "per_device_plane_bytes_sharded": sh["per_device_plane_bytes"],
+        "per_device_plane_bytes_replicated": re_["per_device_plane_bytes"],
+        "per_device_bytes_shrink": round(
+            re_["per_device_plane_bytes"] / sh["per_device_plane_bytes"], 3),
+        "note": "per-device bytes ~halve under 2-way sharding (tail pad "
+                "rounds the plane to shards*ALIGN, so not exactly 2x)",
+    }]
 
 
 def main() -> None:

@@ -1,7 +1,7 @@
 """Sharding-aware checkpointing (npz payload + JSON pytree manifest)."""
 from repro.checkpoint.store import (checkpoint_keys, checkpoint_layout,
-                                    latest_step, restore_checkpoint,
-                                    save_checkpoint)
+                                    disk_like, latest_step,
+                                    restore_checkpoint, save_checkpoint)
 
-__all__ = ["checkpoint_keys", "checkpoint_layout", "latest_step",
-           "restore_checkpoint", "save_checkpoint"]
+__all__ = ["checkpoint_keys", "checkpoint_layout", "disk_like",
+           "latest_step", "restore_checkpoint", "save_checkpoint"]

@@ -116,6 +116,30 @@ def checkpoint_layout(directory: str, *, step: Optional[int] = None) -> str:
             else "per_leaf")
 
 
+def disk_like(directory: str, like: Any, *, step: Optional[int] = None) -> Any:
+    """``like`` with every leaf's SHAPE replaced by the on-disk manifest
+    shape (dtype kept) — the restore template for cross-mesh flat-plane
+    restores, where a checkpoint written under one (workers × shards) mesh
+    carries different plane/counter shapes than the live run
+    (``core.flatspace.adapt_flat_state`` reshards after the restore).
+    Keys must match exactly; only shapes may differ."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory!r}")
+    path = os.path.join(directory, f"step_{step}", "manifest.json")
+    with open(path) as f:
+        shapes = json.load(f)["shapes"]
+    flat_like, treedef = _flatten(like)
+    missing = set(flat_like) - set(shapes)
+    if missing:
+        raise ValueError(f"checkpoint/state mismatch: missing="
+                         f"{sorted(missing)[:5]}")
+    leaves = [jax.ShapeDtypeStruct(tuple(shapes[k]), flat_like[k].dtype)
+              for k in flat_like]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
 def restore_checkpoint(directory: str, like: Any, *, step: Optional[int] = None,
                        shardings: Any = None) -> Tuple[Any, int]:
     """Restore into the structure of ``like`` (a live pytree or eval_shape).

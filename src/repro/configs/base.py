@@ -209,6 +209,17 @@ class OptimizerConfig:
         "fused": "sync_fused",
     }
 
+    def __post_init__(self):
+        # --flat packs every leaf into zero-padded plane slots; the pads
+        # only stay zero through the update because eps > 0 keeps
+        # rsqrt(B² + t'·eps²) finite on them. eps == 0 would silently train
+        # the pads on garbage, so refuse at construction time.
+        if self.flat and self.eps <= 0:
+            raise ValueError(
+                "flat mode requires eps > 0: FlatSpace's zero slot padding "
+                "survives the update only because rsqrt(B² + t'·eps²) stays "
+                f"finite on zero pads (got eps={self.eps!r})")
+
     @property
     def sync(self) -> SyncConfig:
         """The sync-round configuration as one coherent block."""

@@ -85,23 +85,43 @@ class FlatSpace:
     """
 
     def __init__(self, treedef, slots: List[LeafSlot],
-                 batch_shape: Tuple[int, ...], align: int) -> None:
+                 batch_shape: Tuple[int, ...], align: int,
+                 shards: int = 1, eps: Optional[float] = None) -> None:
+        if eps is not None and eps <= 0:
+            raise ValueError(
+                "FlatSpace requires eps > 0: zero slot padding only stays "
+                "zero through the update because rsqrt(B² + t'·eps²) is "
+                "finite on zero pads — with eps == 0 the pads would train "
+                f"on garbage (got eps={eps!r})")
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
         self.treedef = treedef
         self.slots = slots                     # in PLANE order (dtype buckets)
         self.batch_shape = batch_shape
         self.batch_ndim = len(batch_shape)
         self.align = align
-        self.plane_size = (slots[-1].offset + slots[-1].padded) if slots else 0
+        self.shards = shards
+        # Tail-pad ONLY: slot offsets are independent of the shard count, so
+        # the same checkpointed plane reshards across mesh shapes by padding
+        # or truncating zero tail elements. Each of the ``shards`` contiguous
+        # sub-planes is then a whole number of update-kernel tiles, so every
+        # shard boundary lands on a tile (and quantization-block) boundary.
+        end = (slots[-1].offset + slots[-1].padded) if slots else 0
+        self.plane_size = padded_size(end, shards * align) if end else 0
+        self.shard_size = self.plane_size // shards if shards else 0
 
     # ------------------------------------------------------------------ #
     @classmethod
     def build(cls, tree: Pytree, *, batch_ndim: int = 0,
-              align: int = ALIGN) -> "FlatSpace":
+              align: int = ALIGN, shards: int = 1,
+              eps: Optional[float] = None) -> "FlatSpace":
         """Lay out ``tree``'s leaves into dtype buckets of aligned slots.
 
         ``tree`` may be live arrays or ``ShapeDtypeStruct``s. Leaves are
         grouped by dtype (buckets ordered by dtype name, stable within a
-        bucket) so each bucket is one contiguous plane range.
+        bucket) so each bucket is one contiguous plane range. With
+        ``shards > 1`` the plane gains tail padding so it splits into
+        ``shards`` equal tile-aligned sub-planes (slot offsets unchanged).
         """
         assert align % LANES == 0, align
         leaves, treedef = jax.tree_util.tree_flatten(tree)
@@ -127,7 +147,8 @@ class FlatSpace:
             slots.append(LeafSlot(index=i, shape=body, dtype=dtype,
                                   size=size, offset=offset, padded=padded))
             offset += padded
-        return cls(treedef, slots, batch_shape, align)
+        return cls(treedef, slots, batch_shape, align, shards=shards,
+                   eps=eps)
 
     # ------------------------------------------------------------------ #
     # pack / unpack
@@ -149,7 +170,11 @@ class FlatSpace:
                       [(0, slot.padded - slot.size)]
                 flat = jnp.pad(flat, pad)
             parts.append(flat)
-        return parts[0] if len(parts) == 1 else jnp.concatenate(parts, -1)
+        plane = parts[0] if len(parts) == 1 else jnp.concatenate(parts, -1)
+        tail = self.plane_size - plane.shape[-1]
+        if tail:                               # shard-count tail padding
+            plane = jnp.pad(plane, [(0, 0)] * self.batch_ndim + [(0, tail)])
+        return plane
 
     def unpack(self, plane, *, dtype: Optional[Any] = None) -> Pytree:
         """plane -> pytree of leaf views (slice + reshape + cast per leaf).
@@ -246,6 +271,60 @@ def flat_abstract(fs: FlatSpace, abstract_params: Pytree,
     del abstract_params  # geometry already captured by fs
     state = {k: (v if k in SCALAR_STATE_KEYS else plane)
              for k, v in abstract_state.items()}
+    return plane, state
+
+
+def adapt_flat_state(plane, flat_state: Dict[str, Any], *,
+                     workers: int, plane_size: int):
+    """Reshard a restored flat train state across mesh shapes (host-side).
+
+    The plane layout is tail-pad-only (:class:`FlatSpace` with ``shards``),
+    so a checkpoint written under one shard count restores under another by
+    padding or truncating the trailing zero tail — slot offsets never move.
+    Worker-count changes replicate rows (grow) or merge row groups (shrink:
+    identical rows pass through exactly, so a grow→shrink round-trip is
+    bit-exact; diverged rows fall back to the fp32 mean, the same merge a
+    sync round would apply). Scalar counters (step/tprime) replicate on
+    grow and take the group head on shrink.
+    """
+    def _cols(a):
+        have = a.shape[-1]
+        if have == plane_size:
+            return a
+        if have < plane_size:
+            return np.pad(a, [(0, 0)] * (a.ndim - 1) +
+                          [(0, plane_size - have)])
+        tail = a[..., plane_size:]
+        if np.any(tail):
+            raise ValueError(
+                f"cannot truncate flat plane {have} -> {plane_size}: "
+                "dropped tail is not all-zero (checkpoint was written by an "
+                "incompatible slot layout, not just a larger shard pad)")
+        return np.ascontiguousarray(a[..., :plane_size])
+
+    def _rows(a, scalar):
+        have = a.shape[0]
+        if have == workers:
+            return a
+        if workers % have == 0:
+            return np.repeat(a, workers // have, axis=0)
+        if have % workers == 0:
+            g = a.reshape((workers, have // workers) + a.shape[1:])
+            if scalar or bool((g == g[:, :1]).all()):
+                return np.ascontiguousarray(g[:, 0])
+            return g.mean(axis=1).astype(a.dtype)
+        raise ValueError(
+            f"cannot reshard {have} checkpointed workers onto {workers}: "
+            "one count must divide the other")
+
+    plane = _rows(_cols(np.asarray(plane)), scalar=False)
+    state = {}
+    for k, v in flat_state.items():
+        v = np.asarray(v)
+        if k in SCALAR_STATE_KEYS:
+            state[k] = _rows(v, scalar=True)
+        else:
+            state[k] = _rows(_cols(v), scalar=False)
     return plane, state
 
 

@@ -217,6 +217,18 @@ class SyncEngine:
             self.algorithm, n_params, compression=self.codec,
             block=self.block)
 
+    def round_bytes_per_shard(self, n_params: int, n_shards: int = 1
+                              ) -> float:
+        """Per-DEVICE wire bytes of one sync round when the flat plane is
+        FSDP/TP-sharded ``n_shards``-ways: each device all-reduces only its
+        tile-aligned sub-plane across the worker axes, so the round moves
+        ``round_bytes / n_shards`` per device (the full payload still
+        crosses the fabric, but spread over the shard axis — this is the
+        number the alpha-beta model and the trace/replay engine charge a
+        device's collective with). ``n_shards == 1`` is :meth:`round_bytes`
+        exactly."""
+        return self.round_bytes(n_params) / max(1, int(n_shards))
+
     def modeled_bytes_per_step(self, n_params: int) -> float:
         """The static fixed-H formula (the paper's 2P/H claim)."""
         return comm.sync_bytes_per_step(

@@ -115,14 +115,20 @@ def flat_fused_update(plane, g_plane, bs_plane, bl_plane, eta, extra,
     Planes are ``(..., P)`` with ``P`` a multiple of ``block_rows*128``
     (the FlatSpace slot alignment — padding was paid once at pack time, so
     unlike :func:`fused_update` there is NO per-call pad here). ``rnd_rows``
-    is the per-row (rows, 1) fp32 bf16-rounding sidecar covering the full
-    ``(..., P)`` row space. Returns (new_plane, new_b2_local_plane).
+    is the per-row (rows, 1) fp32 bf16-rounding sidecar covering either the
+    full ``(..., P)`` row space or ONE plane row (``P // 128`` rows) — the
+    latter is what the shard-local call under ``shard_map`` passes: a
+    per-shard sidecar view, tiled across the leading (worker) axes here.
+    Returns (new_plane, new_b2_local_plane).
     """
     shape = plane.shape
     x2 = plane.reshape(-1, LANES)
     rows = x2.shape[0]
-    assert rows % block_rows == 0 and rnd_rows.shape == (rows, 1), \
-        (shape, rnd_rows.shape)
+    assert rows % block_rows == 0, (shape,)
+    if rnd_rows.shape[0] != rows:
+        assert rows % rnd_rows.shape[0] == 0, (shape, rnd_rows.shape)
+        rnd_rows = jnp.tile(rnd_rows, (rows // rnd_rows.shape[0], 1))
+    assert rnd_rows.shape == (rows, 1), (shape, rnd_rows.shape)
     scalars = jnp.stack([jnp.asarray(eta, jnp.float32),
                          jnp.asarray(extra, jnp.float32)])
     grid = (rows // block_rows,)

@@ -183,7 +183,12 @@ def flat_ef_plane(plane, residual, rnd_blocks, low_blocks, *,
     per-leaf encode would put it in).
 
     ``rnd_blocks``/``low_blocks`` are (M // block, 1) per-block sidecars
-    for ONE plane row; they are tiled across the leading axes here.
+    for ONE plane row; they are tiled across the leading axes here. Under
+    a sharded plane this runs shard-local inside ``shard_map``: the caller
+    passes the LOCAL payload plus per-shard sidecar views (slices indexed
+    relative to the shard origin), and because shard boundaries land on
+    tile (hence block) boundaries the blocked view partitions the same
+    elements as the replicated call.
     ``fused=False`` composes the same numerics from the three-pass
     quantize/dequantize pipeline (bitwise identical — the bench/debug
     fallback, still one collective). Returns (wire_plane, new_residual),

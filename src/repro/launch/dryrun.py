@@ -1,7 +1,7 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# The two lines above MUST run before any jax import: jax locks the device
-# count at first initialization, and the production dry-run needs 512
+from repro.launch.mesh import require_host_devices
+require_host_devices(512)
+# The two lines above MUST run before any jax computation: jax locks the
+# device count at first initialization, and the production dry-run needs 512
 # placeholder host devices to build the 16x16 (single-pod) and 2x16x16
 # (multi-pod) meshes. Everything else (tests, benches) sees 1 device.
 
@@ -25,6 +25,7 @@ Usage:
 import argparse
 import dataclasses
 import json
+import os
 import time
 import traceback
 from typing import Any, Dict, Optional

@@ -6,11 +6,46 @@ dry-run must set XLA_FLAGS before any jax initialization.
 """
 from __future__ import annotations
 
+import os
+import re
 from typing import Optional
 
 import jax
 
 from repro.configs.base import ModelConfig, ParallelismPlan
+
+_HOST_COUNT_FLAG = "--xla_force_host_platform_device_count"
+
+
+def require_host_devices(n: int, *, strict: bool = True) -> bool:
+    """Ensure the host (CPU) platform exposes >= ``n`` simulated devices.
+
+    Patches ``XLA_FLAGS`` (raising any existing
+    ``--xla_force_host_platform_device_count`` to at least ``n``) — which
+    only takes effect if the jax backend has NOT initialized yet — then
+    verifies the live device count. Call it before any jax computation
+    (dryrun does so at import time; multi-device tests run in a
+    subprocess for the same reason). Returns True when ``n`` devices are
+    available; with ``strict=False`` a too-late call degrades to False
+    instead of raising, so opportunistic callers (benchmarks) can skip
+    their multi-device sections.
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    m = re.search(_HOST_COUNT_FLAG + r"=(\d+)", flags)
+    if m is None:
+        os.environ["XLA_FLAGS"] = f"{flags} {_HOST_COUNT_FLAG}={n}".strip()
+    elif int(m.group(1)) < n:
+        os.environ["XLA_FLAGS"] = flags.replace(
+            m.group(0), f"{_HOST_COUNT_FLAG}={n}")
+    if jax.device_count() >= n:
+        return True
+    if strict:
+        raise RuntimeError(
+            f"need {n} host devices but jax initialized with "
+            f"{jax.device_count()} — require_host_devices must run before "
+            "the first jax computation (use a subprocess if the parent "
+            "already touched jax)")
+    return False
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -22,6 +57,18 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_debug_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
     """Small mesh for CPU multi-device tests (host platform device count)."""
     return jax.make_mesh(shape, axes)
+
+
+def make_worker_shard_mesh(n_workers: int, n_shards: int = 1,
+                           axes=("data", "model")):
+    """2-D (workers × shards) CPU mesh for sharded ``--flat`` runs/tests.
+
+    ``data`` carries the local-SGD workers, ``model`` the per-worker
+    FSDP/TP plane shards (``sharding.partition.plane_shard_axes``). Sets
+    the ``XLA_FLAGS`` host-device override when it can still take effect.
+    """
+    require_host_devices(n_workers * n_shards)
+    return jax.make_mesh((n_workers, n_shards), axes)
 
 
 # Parameter-count thresholds steering worker granularity (see DESIGN.md §2/§4)

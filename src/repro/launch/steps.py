@@ -143,6 +143,10 @@ class TrainPrograms:
                                  # leaf x the algorithm's round multiplier;
                                  # the flat plane issues ONE regardless)
     is_flat: bool = False
+    n_shards: int = 1            # FSDP/TP sub-planes per worker (flat runs):
+                                 # each device holds plane_size/n_shards
+                                 # elements per worker row, and a sync round
+                                 # moves per-shard wire bytes, not full-plane
     flatspace: Any = None        # FlatSpace geometry (local_adaalter runs)
     legacy_abstract: Any = None  # (params, opt_state) per-leaf ShapeDtypeStructs
     flat_abstract: Any = None    # (plane, flat_state) ShapeDtypeStructs
@@ -193,9 +197,13 @@ def build_train_programs(cfg: ModelConfig, shape: ShapeConfig,
             "OptimizerConfig.flat requires a local Local AdaAlter run "
             f"(got optimizer={opt_cfg.name!r}, local={local})")
     fs = None
+    n_shards = 1
     if flat_ok:
         from repro.core import flatspace as fsp
-        fs = fsp.FlatSpace.build(abstract[0], batch_ndim=1)
+        from repro.sharding.specs import plane_shard_count
+        n_shards = plane_shard_count(mesh, plan)
+        fs = fsp.FlatSpace.build(abstract[0], batch_ndim=1, shards=n_shards,
+                                 eps=opt_cfg.eps if opt_cfg.flat else None)
 
     # Two-stage init. The RNG draw compiles UNSHARDED: letting GSPMD partition
     # the threefry computation changes the drawn values whenever a
@@ -318,7 +326,7 @@ def build_train_programs(cfg: ModelConfig, shape: ShapeConfig,
     if opt_cfg.flat:
         init_fn, local_step, sync_step, p_sh, s_sh = _flat_programs(
             fs, opt_cfg, mesh, plan, R, abstract, _expand, _draw, vworker,
-            b_sh)
+            b_sh, leaf_p_sh=p_sh)
 
     return TrainPrograms(
         init_fn=init_fn, local_step=local_step, sync_step=sync_step,
@@ -326,14 +334,14 @@ def build_train_programs(cfg: ModelConfig, shape: ShapeConfig,
         n_workers=R, is_local=local,
         H=getattr(opt, "H", 1) if opt_lib.is_local(opt) else 1,
         n_payload_leaves=len(jax.tree_util.tree_leaves(abstract[0])),
-        is_flat=opt_cfg.flat, **flat_fields)
+        is_flat=opt_cfg.flat, n_shards=n_shards, **flat_fields)
 
 
 # --------------------------------------------------------------------------- #
 # flat-plane step builders (OptimizerConfig.flat; core/flatspace.py)
 # --------------------------------------------------------------------------- #
 def _flat_programs(fs, opt_cfg: OptimizerConfig, mesh, plan, R: int,
-                   abstract, _expand, _draw, vworker, b_sh):
+                   abstract, _expand, _draw, vworker, b_sh, *, leaf_p_sh):
     """Local AdaAlter over FlatSpace planes: the whole per-step update is
     ONE Pallas launch over the packed plane (vs one per leaf), and the sync
     round is ONE fused EF kernel + ONE all-reduce of a single flat wire
@@ -346,6 +354,22 @@ def _flat_programs(fs, opt_cfg: OptimizerConfig, mesh, plan, R: int,
     differ in ulps between the two compiled programs, so an adaptive
     schedule can diverge at a threshold edge; fixed_h cannot.
 
+    When the plan carries FSDP/TP axes the mesh can use
+    (``sharding.partition.plane_shard_axes``), each worker row of every
+    plane is additionally split into ``fs.shards`` contiguous tile-aligned
+    sub-planes, one per device down the shard axes. The flat kernels then
+    run shard-local under ``shard_map`` (pallas_call has no partitioning
+    rule) with per-shard sidecar views, the ``[params ‖ B²]`` sync payload
+    is concatenated shard-locally (shard boundaries are block boundaries,
+    so the blocked quantization partitions the same elements), and the sync
+    mean reduces over the WORKER axes only — sharded slots stay partitioned
+    through the round. The unpacked per-leaf param views are pinned to the
+    per-leaf shardings (``leaf_p_sh``) so the model forward compiles to the
+    same sharded program whether the plane is replicated or sharded —
+    that, plus the shard-local kernels being elementwise/block-exact, is
+    what keeps sharded-flat bitwise equal to replicated-flat (pinned by
+    tests/test_flat_sharded.py).
+
     Returns ``(init_fn, local_step, sync_step, p_sh, s_sh)`` where the
     state layout is (plane, {scalars + per-state planes}).
     """
@@ -356,6 +380,7 @@ def _flat_programs(fs, opt_cfg: OptimizerConfig, mesh, plan, R: int,
     from repro.core.sync_engine import drift_statistic
     from repro.kernels.adaalter_update import LANES as _LANES
     from repro.kernels.ops import on_tpu
+    from repro.sharding.specs import plane_shardings
 
     if opt_cfg.eps <= 0:
         raise ValueError("flat mode requires eps > 0: the zero slot padding "
@@ -381,11 +406,81 @@ def _flat_programs(fs, opt_cfg: OptimizerConfig, mesh, plan, R: int,
     staleness = stat == "grad_staleness"
 
     w_entry = _axes_entry(tuple(plan.local_axes))
-    plane_sh = NamedSharding(mesh, P(w_entry, None))
-    scalar_sh = NamedSharding(mesh, P(w_entry))
+    plane_sh, scalar_sh, shard_axes = plane_shardings(mesh, plan)
+    n_shards = 1
+    for a in shard_axes:
+        n_shards *= mesh.shape[a]
+    assert fs.shards == n_shards, (fs.shards, n_shards, shard_axes)
+    sharded = n_shards > 1
     p_sh = plane_sh
     s_sh = {k: (scalar_sh if k in SCALAR_STATE_KEYS else plane_sh)
             for k in abstract[1]}
+
+    # ---------------- shard-local kernel wrappers (n_shards > 1) --------- #
+    # pallas_call has no GSPMD partitioning rule, so the sharded plane runs
+    # the flat kernels shard-local under shard_map: each device sees its
+    # (R_local, plane_size/n_shards) sub-planes plus per-shard sidecar
+    # VIEWS (the sidecars are shard_map inputs sharded over the shard axes,
+    # i.e. slices indexed relative to the shard origin). Everything inside
+    # is elementwise or blocked within a shard, and shard boundaries land
+    # on tile/block boundaries, so shard-local bits == replicated bits.
+    if sharded:
+        from jax.experimental.shard_map import shard_map
+
+        s_entry = _axes_entry(shard_axes)
+        pspec = P(w_entry, s_entry)
+        side_spec = P(s_entry, None)
+        upd_rnd_pw = fs.rows_sidecar(elems, _LANES)       # (P//LANES, 1)
+        enc_rnd_pw = fs.rows_sidecar(elems, block)        # (P//block, 1)
+
+        def _upd_local(x, g, bs, bl, eta, extra, rnd):
+            if opt_cfg.use_pallas:
+                from repro.kernels.adaalter_update import flat_fused_update
+                return flat_fused_update(x, g, bs, bl, eta, extra, rnd,
+                                         interpret=not on_tpu())
+            from repro.kernels.ref import flat_fused_update_ref
+            e16 = jnp.broadcast_to(rnd > 0,
+                                   (rnd.shape[0], _LANES)).reshape(-1)
+            return flat_fused_update_ref(x, g, bs, bl, eta, extra, e16)
+
+        _upd_sharded = shard_map(
+            _upd_local, mesh=mesh,
+            in_specs=(pspec, pspec, pspec, pspec, P(), P(), side_spec),
+            out_specs=(pspec, pspec), check_rep=False)
+
+        def _enc_local(pp, bb, rp, rb, rndp):
+            # shard-local [params ‖ B²] concat: the boundary sits at a
+            # multiple of align (hence block), so every quantization block
+            # holds exactly the elements the replicated concat's would
+            nb = rndp.shape[0]
+            rnd = jnp.concatenate([rndp, jnp.zeros_like(rndp)], 0)
+            low = jnp.concatenate(
+                [jnp.full((nb, 1), f32min, jnp.float32),
+                 jnp.zeros((nb, 1), jnp.float32)], 0)
+            payload = jnp.concatenate([pp, bb], -1)
+            res = jnp.concatenate([rp, rb], -1)
+            half = pp.shape[-1]
+            if sync_cfg.compression == "int8":
+                from repro.kernels.sync_fused import flat_ef_plane
+                wire, nres = flat_ef_plane(
+                    payload, res, rnd, low, block=block,
+                    use_pallas=opt_cfg.use_pallas, fused=sync_cfg.fused)
+            else:       # bf16 wire: elementwise EF roundtrip
+                from repro.kernels.tiling import round_through_bf16
+                low_e = jnp.broadcast_to(low, (2 * nb, block)).reshape(-1)
+                rnd_e = jnp.broadcast_to(rnd > 0,
+                                         (2 * nb, block)).reshape(-1)
+                v = payload + res
+                vq = jnp.maximum(round_through_bf16(v), low_e)
+                wire = jnp.where(rnd_e, round_through_bf16(vq), vq)
+                nres = v - wire
+            return (wire[..., :half], wire[..., half:],
+                    nres[..., :half], nres[..., half:])
+
+        _enc_sharded = shard_map(
+            _enc_local, mesh=mesh,
+            in_specs=(pspec, pspec, pspec, pspec, side_spec),
+            out_specs=(pspec, pspec, pspec, pspec), check_rep=False)
 
     def _expand_flat(base):
         params, state = _expand(base)
@@ -396,8 +491,34 @@ def _flat_programs(fs, opt_cfg: OptimizerConfig, mesh, plan, R: int,
     def init_fn(rng):
         return _place(_draw(rng))
 
+    def flat_sync_sharded(new_plane, new_state):
+        """Alg. 4 lines 11-12 with a sharded plane: the EF encode runs
+        shard-local, and the wire mean reduces over the WORKER axes only —
+        GSPMD all-reduces each device's sub-plane across its worker
+        replicas while the shard (FSDP/TP) slots stay partitioned, so the
+        round moves per-shard wire bytes per device, not full-plane."""
+        b2 = new_state["b2_local"]
+        if lossless:
+            wire_p, wire_b = new_plane, b2
+            nres_p = nres_b = None
+        else:
+            wire_p, wire_b, nres_p, nres_b = _enc_sharded(
+                new_plane, b2, new_state["res_params"],
+                new_state["res_b2"], jnp.asarray(enc_rnd_pw))
+        mean_p = mean_planes(wire_p, elems)        # worker-axes collective
+        mean_b = mean_planes(wire_b, None)
+        out_state = {**new_state,
+                     "tprime": jnp.zeros_like(new_state["tprime"]),
+                     "b2_sync": mean_b, "b2_local": mean_b}
+        if nres_p is not None:
+            out_state["res_params"] = nres_p
+            out_state["res_b2"] = nres_b
+        return mean_p, out_state
+
     def flat_sync(new_plane, new_state):
         """Alg. 4 lines 11-12 over the packed payload — one wire array."""
+        if sharded:
+            return flat_sync_sharded(new_plane, new_state)
         payload = jnp.concatenate([new_plane, new_state["b2_local"]], -1)
         new_res = None
         if lossless:
@@ -432,21 +553,34 @@ def _flat_programs(fs, opt_cfg: OptimizerConfig, mesh, plan, R: int,
         return mean[..., :psize], out_state
 
     def step(plane, fstate, batch, *, do_sync: bool):
-        loss, metrics, grads = vworker(fs.unpack(plane), batch)
+        # pin the unpacked per-leaf views to the SAME per-leaf shardings
+        # the non-flat path trains under: the forward then compiles to one
+        # sharded program regardless of how the plane itself is laid out
+        # (replicated vs sharded plane → identical grads, bit for bit)
+        p_tree = jax.tree_util.tree_map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s),
+            fs.unpack(plane), leaf_p_sh)
+        loss, metrics, grads = vworker(p_tree, batch)
         applied = grads
         if opt_cfg.grad_clip > 0:
             applied, _ = opt_lib.clip_by_global_norm(
                 grads, opt_cfg.grad_clip, batch_ndim=1)
-        a_plane = fs.pack(applied)
+        a_plane = jax.lax.with_sharding_constraint(fs.pack(applied),
+                                                   plane_sh)
         # the drift statistics must see RAW gradients (same contract as the
         # per-leaf fused path); with clipping off the packed plane is both
         g_plane = (a_plane if (not staleness or opt_cfg.grad_clip <= 0)
-                   else fs.pack(grads))
+                   else jax.lax.with_sharding_constraint(fs.pack(grads),
+                                                         plane_sh))
         step_no = fstate["step"] + 1
         tprime = fstate["tprime"] + 1
         eta = opt_lib.warmup_lr(opt_cfg.lr, step_no[0], opt_cfg.warmup_steps)
         extra = tprime[0].astype(jnp.float32) * opt_cfg.eps ** 2
-        if opt_cfg.use_pallas:
+        if sharded:
+            new_plane, new_b2 = _upd_sharded(
+                plane, a_plane, fstate["b2_sync"], fstate["b2_local"],
+                eta, extra, jnp.asarray(upd_rnd_pw))
+        elif opt_cfg.use_pallas:
             from repro.kernels.adaalter_update import flat_fused_update
             new_plane, new_b2 = flat_fused_update(
                 plane, a_plane, fstate["b2_sync"], fstate["b2_local"],

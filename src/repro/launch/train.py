@@ -148,11 +148,30 @@ def train_loop(cfg: ModelConfig, shape: ShapeConfig, opt_cfg: OptimizerConfig,
                     abstract = programs.legacy_abstract
                 like = (abstract if no_ss
                         else (*abstract, engine.export_state()))
+                resharded = False
+                if disk_flat:
+                    # Cross-MESH flat restore: a plane written under a
+                    # different (workers × shards) mesh carries different
+                    # plane/counter shapes. Restore into the on-disk shapes,
+                    # then reshard host-side (tail-pad-only slot layout: pad/
+                    # truncate the zero tail, replicate or merge worker rows).
+                    from repro.checkpoint import disk_like
+                    like = disk_like(checkpoint_dir, like)
                 state, start_step = restore_checkpoint(checkpoint_dir, like)
                 if no_ss:
                     params, opt_state = state
                 else:
                     params, opt_state, sync_state = state
+                if disk_flat:
+                    from repro.core.flatspace import adapt_flat_state
+                    want = (programs.n_workers,
+                            programs.flatspace.plane_size)
+                    if tuple(params.shape) != want:
+                        disk_shape = tuple(params.shape)
+                        params, opt_state = adapt_flat_state(
+                            params, opt_state, workers=want[0],
+                            plane_size=want[1])
+                        resharded = True
                 if disk_flat and not programs.is_flat:
                     params, opt_state = programs.to_legacy(params, opt_state)
                 elif programs.is_flat and not disk_flat:
@@ -162,6 +181,9 @@ def train_loop(cfg: ModelConfig, shape: ShapeConfig, opt_cfg: OptimizerConfig,
                     if disk_flat != programs.is_flat:
                         layout = (" (flat -> per-leaf)" if disk_flat
                                   else " (per-leaf -> flat)")
+                    if resharded:
+                        layout += (f" (resharded plane {disk_shape} -> "
+                                   f"{want})")
                     print(f"restored checkpoint at step {start_step}"
                           f"{' (no SyncState)' if no_ss else ''}{layout}")
         engine.reset(start_step)
@@ -182,7 +204,12 @@ def train_loop(cfg: ModelConfig, shape: ShapeConfig, opt_cfg: OptimizerConfig,
             # host cannot measure the TPU-side pass or a real fabric)
             enc_bytes = engine.modeled_encode_hbm_bytes(n_params)
             enc_t = enc_bytes / V5E.hbm_bw
-            wire_t = comm.collective_time(round_b, n_coll, R)
+            # with a sharded flat plane each device's worker-axis collective
+            # moves its sub-plane only — the replay engine prices the round
+            # per shard, not full-plane
+            shard_b = engine.round_bytes_per_shard(n_params,
+                                                   programs.n_shards)
+            wire_t = comm.collective_time(shard_b, n_coll, R)
             st0 = engine.export_state()
             recorder = TraceRecorder(meta={
                 "kind": "train", "arch": cfg.name,
@@ -194,6 +221,8 @@ def train_loop(cfg: ModelConfig, shape: ShapeConfig, opt_cfg: OptimizerConfig,
                 "use_pallas": opt_cfg.use_pallas,
                 "n_payload_leaves": programs.n_payload_leaves,
                 "n_collectives_per_round": n_coll,
+                "n_shards": programs.n_shards,
+                "round_wire_bytes_per_shard": shard_b,
                 "fabric": dataclasses.asdict(comm.FabricModel()),
                 "hbm_bw": V5E.hbm_bw, "clock": "perf_counter",
                 "sync_state0": {"since": int(st0.since),
@@ -236,6 +265,8 @@ def train_loop(cfg: ModelConfig, shape: ShapeConfig, opt_cfg: OptimizerConfig,
                         recorder.add("collective", worker=w, step=step,
                                      t0=t_end + enc_t, dur=wire_t,
                                      modeled=True, wire_bytes=round_b,
+                                     wire_bytes_per_shard=shard_b,
+                                     n_shards=programs.n_shards,
                                      n_collectives=n_coll,
                                      codec=engine.codec.name, workers=R)
             losses.append(loss)
@@ -371,6 +402,14 @@ def main() -> None:
                          "decisions + modeled device/wire costs. Export "
                          "with `python -m repro.trace.chrome`, what-if "
                          "replay with `python -m repro.trace.replay`")
+    ap.add_argument("--workers", type=int, default=0, metavar="N",
+                    help="size of the mesh's data (worker) axis; remaining "
+                         "host devices form the model axis, which a --flat "
+                         "run uses to FSDP/TP-shard each worker's plane "
+                         "(sharded sub-planes, per-shard sync payload). "
+                         "0 -> all devices on the worker axis. Pair with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=K "
+                         "to simulate K CPU devices")
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--iid", action="store_true", help="disable non-IID workers")
@@ -395,12 +434,15 @@ def main() -> None:
     sched = (f"H={args.H}" if args.sync_policy == "fixed_h" else
              f"adaptive(thr={args.sync_threshold}, "
              f"h=[{args.h_min},{args.h_max or 4 * args.H}])")
+    mesh = make_cpu_mesh(args.workers or None)
     print(f"training {cfg.name} ({count_params(cfg):,} params) with "
           f"{args.optimizer} {sched}"
           f"{' +' + args.compress + ' sync' if args.compress else ''} "
-          f"on {jax.device_count()} device(s)")
+          f"on {jax.device_count()} device(s), mesh "
+          f"{dict(mesh.shape)}")
     res = train_loop(cfg, shape, opt_cfg, steps=args.steps, seed=args.seed,
-                     non_iid=not args.iid, checkpoint_dir=args.checkpoint_dir,
+                     mesh=mesh, non_iid=not args.iid,
+                     checkpoint_dir=args.checkpoint_dir,
                      checkpoint_every=args.checkpoint_every,
                      trace_out=args.trace)
     print(f"done in {res.wall_s:.1f}s; final loss {res.final_loss:.4f}; "

@@ -78,6 +78,28 @@ class ShardingRules:
         return NamedSharding(self.mesh, self.resolve(logical))
 
 
+def plane_shard_axes(mesh: Mesh, plan) -> Tuple[str, ...]:
+    """Mesh axes the flat parameter plane shards its element dim over.
+
+    Derived from the SAME plan fields the per-leaf path uses: the FSDP
+    (ZeRO) axes plus the tensor-parallel axis, in that order — minus the
+    worker (``local_axes``) dims, which shard the plane's leading axis, and
+    minus axes the mesh doesn't carry (or carries at size 1, where sharding
+    is a no-op). Empty result = the PR-4 replicated plane.
+    """
+    local = set(plan.local_axes)
+    cand = tuple(plan.fsdp_axes)
+    if getattr(plan, "tp_axis", ""):
+        cand = cand + (plan.tp_axis,)
+    out, seen = [], set()
+    for a in cand:
+        if (a and a in mesh.shape and mesh.shape[a] > 1
+                and a not in local and a not in seen):
+            out.append(a)
+            seen.add(a)
+    return tuple(out)
+
+
 @contextlib.contextmanager
 def use_rules(rules: Optional[ShardingRules]):
     prev = getattr(_state, "rules", None)

@@ -13,7 +13,7 @@ import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 from jax.tree_util import DictKey, SequenceKey
 
-from repro.sharding.partition import ShardingRules
+from repro.sharding.partition import ShardingRules, plane_shard_axes
 
 _STACKED_ROOTS = ("blocks", "encoder")
 
@@ -148,3 +148,37 @@ def opt_state_shardings(rules: ShardingRules, opt_state, param_sh, *,
     for k, v in opt_state.items():
         out[k] = scalar if k in ("step", "tprime") else param_sh
     return out
+
+
+# --------------------------------------------------------------------------- #
+# flat parameter plane (core/flatspace.py) shardings
+# --------------------------------------------------------------------------- #
+def _axis_entry(axes: Tuple[str, ...]):
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def plane_shard_count(mesh, plan) -> int:
+    """Number of tile-aligned sub-planes the flat plane splits into."""
+    n = 1
+    for a in plane_shard_axes(mesh, plan):
+        n *= mesh.shape[a]
+    return n
+
+
+def plane_shardings(mesh, plan):
+    """NamedShardings for the flat train-state planes.
+
+    Returns ``(plane, scalar, shard_axes)``: the plane sharding puts the
+    worker (local-SGD) axes on the leading dim and the FSDP/TP shard axes
+    on the element dim — each device holds one contiguous, tile-aligned
+    sub-plane per worker row. ``shard_axes == ()`` reproduces the PR-4
+    replicated plane exactly (``P(workers, None)``).
+    """
+    shard_axes = plane_shard_axes(mesh, plan)
+    w = _axis_entry(tuple(plan.local_axes))
+    s = _axis_entry(shard_axes)
+    plane = NamedSharding(mesh, P(w, s))
+    scalar = NamedSharding(mesh, P(w))
+    return plane, scalar, shard_axes

@@ -97,6 +97,9 @@ class ReplayKnobs:
     h_max: Optional[int] = None
     codec: Optional[str] = None
     flat: Optional[bool] = None             # one collective vs per-leaf
+    n_shards: Optional[int] = None          # FSDP/TP sub-planes per worker:
+                                            # each device's collective moves
+                                            # payload/n_shards (sharded flat)
     cross_pod: bool = False
 
     def to_dict(self) -> Dict[str, Any]:
@@ -125,8 +128,12 @@ class ReplayResult:
     codec: str
     policy: str
     n_collectives_per_round: int
-    round_wire_bytes: float
-    knobs: Dict[str, Any]
+    round_wire_bytes: float       # full logical payload of one round
+    n_shards: int = 1
+    round_wire_bytes_per_shard: float = 0.0   # what ONE device's collective
+                                              # moves (= payload / n_shards;
+                                              # the priced quantity)
+    knobs: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -284,11 +291,18 @@ def replay(trace: Trace, knobs: ReplayKnobs = ReplayKnobs()) -> ReplayResult:
     # the what-if schedule, from the recorded drift stream
     sync_steps, policy_name = _schedule(trace, knobs, records)
 
-    # modeled wire time of one round under the knob fabric
+    # modeled wire time of one round under the knob fabric. With a sharded
+    # flat plane (n_shards > 1) each device's worker-axis collective moves
+    # only its sub-plane, so the alpha-beta model is charged the per-shard
+    # payload, not the full plane (recorded in meta by train --trace; the
+    # --shards knob sweeps it).
     fabric = _resolve_fabric(meta, knobs)
+    n_shards = max(1, int(knobs.n_shards if knobs.n_shards is not None
+                          else meta.get("n_shards", 1)))
     round_bytes = comm.sync_payload_bytes(algorithm, n_params,
                                           compression=codec, block=block)
-    wire_time = (fabric.collective_time(round_bytes, n_coll, n_workers,
+    shard_bytes = round_bytes / n_shards
+    wire_time = (fabric.collective_time(shard_bytes, n_coll, n_workers,
                                         cross_pod=knobs.cross_pod)
                  if fabric is not None else 0.0)
 
@@ -309,6 +323,7 @@ def replay(trace: Trace, knobs: ReplayKnobs = ReplayKnobs()) -> ReplayResult:
         sync_count=n_sync, sync_steps=sync_steps, steps=len(records),
         n_workers=n_workers, codec=codec, policy=policy_name,
         n_collectives_per_round=n_coll, round_wire_bytes=round_bytes,
+        n_shards=n_shards, round_wire_bytes_per_shard=shard_bytes,
         knobs=knobs.to_dict())
 
 
@@ -439,6 +454,10 @@ def main() -> None:
                     help="replay the sync round as ONE collective")
     ap.add_argument("--per-leaf", dest="flat", action="store_false",
                     help="replay the sync round as per-leaf collectives")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="FSDP/TP sub-planes per worker: price each "
+                         "device's collective at payload/shards (defaults "
+                         "to the trace's recorded n_shards)")
     ap.add_argument("--bw-scale", type=float, default=None,
                     help="scale the recorded fabric bandwidths (implies a "
                          "modeled fabric)")
@@ -461,7 +480,8 @@ def main() -> None:
                         n_workers=args.workers, H=args.H,
                         sync_policy=args.policy,
                         sync_threshold=args.threshold, codec=args.codec,
-                        flat=args.flat, cross_pod=args.cross_pod)
+                        flat=args.flat, n_shards=args.shards,
+                        cross_pod=args.cross_pod)
     print(json.dumps(replay(trace, knobs).to_dict(), indent=1))
 
 
