@@ -68,7 +68,10 @@ def main() -> None:
             new = r(steps=12 if args.quick else 30)
         elif name == "trace_replay":
             from benchmarks.bench_trace_replay import run as r
-            new = r(steps=24 if args.quick else 40)
+            # traces land next to the BENCH json so the paths its rows
+            # reference survive as artifacts
+            new = r(steps=24 if args.quick else 40,
+                    trace_dir=args.json_dir or ".")
         elif name == "roofline":
             from benchmarks.bench_roofline import run as r
             new = r()

@@ -188,6 +188,12 @@ class OptimizerConfig:
     # the accumulated drift lands within an ulp of the threshold; fixed_h
     # schedules are layout-independent. local_adaalter only.
     flat: bool = False
+    # observability (obs/): compile the extra health metrics (raw-grad
+    # global norm) into the step programs. Off by default so an
+    # uninstrumented run pays literally nothing — the emission is not in
+    # the jitted program at all, not merely skipped host-side. The train
+    # CLI flips this on under --trace / --metrics.
+    obs_metrics: bool = False
     # --- flat aliases of the SyncConfig block (read ``cfg.sync`` instead) ---
     sync_policy: str = "fixed_h"
     sync_threshold: float = 0.0

@@ -57,11 +57,25 @@ OPT_FLAGS = dict(attn_tp_pad=True, attn_remat=True, fused_xent=True,
 # attn_bf16_probs: REFUTED under CPU f32-promoted lowering (§Perf qwen iter 5)
 
 
+def _hlo_regions(compiled):
+    """Per-fused-region cost table of one compiled program (or None when
+    the backend's HLO text defeats the parser) — attached to the modeled
+    step spans and exported as dryrun metrics. The program is already
+    compiled; the walk is pure text parsing."""
+    try:
+        from repro.roofline import region_table
+        from repro.roofline.analysis import V5E
+        return region_table(compiled.as_text(),
+                            peak_flops=V5E.peak_flops, hbm_bw=V5E.hbm_bw)
+    except Exception:
+        return None
+
+
 def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool,
                 opt_name: str = "local_adaalter", H: int = 4,
                 compression: str = "", verbose: bool = True,
                 optimized: bool = False, flat: bool = False,
-                recorder=None) -> Dict[str, Any]:
+                recorder=None, registry=None) -> Dict[str, Any]:
     """Lower+compile one (arch, shape, mesh); return the roofline record(s).
 
     ``compression`` selects the sync wire codec. The compiled sync_step then
@@ -154,6 +168,16 @@ def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool,
                            memory_analysis=str(compiled.memory_analysis()),
                            compile_s=round(time.time() - t0, 1))
                 records.append(rec)
+                hlo_tab = (_hlo_regions(compiled)
+                           if (recorder is not None or registry) else None)
+                if registry:
+                    registry.set_many(
+                        {"compile_s": rec["compile_s"],
+                         "t_compute_s": rec["t_compute_s"],
+                         "t_memory_s": rec["t_memory_s"],
+                         "t_collective_s": rec["t_collective_s"]},
+                        arch=arch, shape=shape_name, mesh=mesh_name,
+                        variant=vname)
                 if recorder is not None:
                     # one timeline entry per compiled variant: the measured
                     # compile wall, the roofline-modeled step time, and (for
@@ -166,13 +190,16 @@ def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool,
                     modeled_step = (max(rec["t_compute_s"],
                                         rec["t_memory_s"])
                                     + rec["t_collective_s"])
+                    hlo_args = ({"hlo_optimal_s": hlo_tab["optimal_s"],
+                                 "hlo_regions": hlo_tab["regions"]}
+                                if hlo_tab else {})
                     recorder.add("local_step", step=len(records) - 1,
                                  t0=t_now, dur=modeled_step, modeled=True,
                                  pair=tag, variant=vname,
                                  t_compute_s=rec["t_compute_s"],
                                  t_memory_s=rec["t_memory_s"],
                                  t_collective_s=rec["t_collective_s"],
-                                 dominant=rec["dominant"])
+                                 dominant=rec["dominant"], **hlo_args)
                     if coll_model is not None:
                         layout = "flat" if flat else "per_leaf"
                         m = coll_model[layout]
@@ -212,6 +239,16 @@ def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool,
                        memory_analysis=str(compiled.memory_analysis()),
                        compile_s=round(time.time() - t0, 1))
             records.append(rec)
+            hlo_tab = (_hlo_regions(compiled)
+                       if (recorder is not None or registry) else None)
+            if registry:
+                registry.set_many(
+                    {"compile_s": rec["compile_s"],
+                     "t_compute_s": rec["t_compute_s"],
+                     "t_memory_s": rec["t_memory_s"],
+                     "t_collective_s": rec["t_collective_s"]},
+                    arch=arch, shape=shape_name, mesh=mesh_name,
+                    variant=vname)
             if recorder is not None:
                 t_now = recorder.now()
                 tag = f"{arch}/{shape_name}/{mesh_name}"
@@ -220,13 +257,16 @@ def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool,
                              variant=vname, phase="compile")
                 modeled_step = (max(rec["t_compute_s"], rec["t_memory_s"])
                                 + rec["t_collective_s"])
+                hlo_args = ({"hlo_optimal_s": hlo_tab["optimal_s"],
+                             "hlo_regions": hlo_tab["regions"]}
+                            if hlo_tab else {})
                 recorder.add("local_step", step=len(records) - 1, t0=t_now,
                              dur=modeled_step, modeled=True, pair=tag,
                              variant=vname,
                              t_compute_s=rec["t_compute_s"],
                              t_memory_s=rec["t_memory_s"],
                              t_collective_s=rec["t_collective_s"],
-                             dominant=rec["dominant"])
+                             dominant=rec["dominant"], **hlo_args)
             if verbose:
                 print(f"  [{vname}] {rep.summary()}")
                 print(f"  [{vname}] mem: {compiled.memory_analysis()}")
@@ -254,6 +294,11 @@ def main() -> None:
     ap.add_argument("--trace", default="", metavar="OUT.json",
                     help="record compile walls + roofline-modeled step/wire "
                          "spans across all pairs as a repro.trace timeline")
+    ap.add_argument("--metrics", default="", metavar="OUT.jsonl",
+                    help="export per-pair dryrun metrics (repro.obs): "
+                         "compile wall and roofline terms per (arch, shape, "
+                         "mesh, variant) as JSONL rows + a Prometheus "
+                         "textfile snapshot (OUT.prom)")
     ap.add_argument("--optimized", action="store_true",
                     help="apply the beyond-paper perf flags (§Perf '+opt')")
     ap.add_argument("--flat", action="store_true",
@@ -275,8 +320,17 @@ def main() -> None:
             "kind": "dryrun", "optimizer": args.optimizer, "H": args.H,
             "compression": args.compress, "flat": args.flat,
             "clock": "perf_counter"})
+    from repro.obs import NULL_REGISTRY
+    registry = NULL_REGISTRY
+    if args.metrics:
+        from repro.obs import MetricsRegistry
+        registry = MetricsRegistry(labels={
+            "kind": "dryrun", "optimizer": args.optimizer,
+            "codec": args.compress or "fp32"})
+        registry.open_jsonl(args.metrics)
 
     n_ok = n_fail = 0
+    n_pair = 0
     for arch in archs:
         for shape_name in shapes:
             for multi_pod in meshes:
@@ -287,8 +341,11 @@ def main() -> None:
                                          opt_name=args.optimizer, H=args.H,
                                          compression=args.compress,
                                          optimized=args.optimized,
-                                         flat=args.flat, recorder=recorder)
+                                         flat=args.flat, recorder=recorder,
+                                         registry=registry)
                     n_ok += 1
+                    if registry:
+                        registry.counter("pairs_ok_total").inc()
                     if args.out:
                         os.makedirs(args.out, exist_ok=True)
                         fn = (f"{arch}_{shape_name}_"
@@ -299,10 +356,22 @@ def main() -> None:
                     print(f"   OK in {result['elapsed_s']}s", flush=True)
                 except Exception:
                     n_fail += 1
+                    if registry:
+                        registry.counter("pairs_failed_total").inc()
                     print(f"   FAIL: {tag}\n{traceback.format_exc()}", flush=True)
+                if registry:     # one metrics row per attempted pair
+                    registry.collect(n_pair)
+                n_pair += 1
     if recorder is not None:
         recorder.save(args.trace)
         print(f"wrote trace {args.trace} ({len(recorder.spans)} spans)")
+    if registry:
+        base = (args.metrics[:-len(".jsonl")]
+                if args.metrics.endswith(".jsonl") else args.metrics)
+        registry.write_prom(base + ".prom")
+        registry.close()
+        print(f"wrote metrics {args.metrics} "
+              f"(+ Prometheus textfile {base + '.prom'})")
     print(f"\ndry-run complete: {n_ok} ok, {n_fail} failed")
     if n_fail:
         raise SystemExit(1)

@@ -20,7 +20,10 @@ Training with a *local* optimizer (the paper's Algorithms 2/4):
   (CADA-proper ‖g_t − g_last_sync‖² against the ``g_anchor`` state leaf,
   which sync steps re-anchor). Either statistic reduces each worker to a
   scalar *before* the (R,)-sized cross-worker mean, so the skipped rounds
-  stay communication-free in any meaningful sense.
+  stay communication-free in any meaningful sense. Under the same opt-in
+  pattern, ``OptimizerConfig.obs_metrics`` compiles in
+  ``metrics['grad_norm']`` — the per-worker L2 of the raw (pre-clip)
+  gradients — for the ``obs`` health probes and trace span args.
   With ``SyncConfig.compression`` set ('int8', 'bf16') the sync payload
   rides the corresponding ``WireCodec`` (``core/codecs.py``; error feedback)
   via the ``compressed_sync`` shim inside ``opt.sync`` — fused into a
@@ -263,6 +266,12 @@ def build_train_programs(cfg: ModelConfig, shape: ShapeConfig,
                 new_params, new_state = vlocal(grads, opt_state, params)
             out_metrics = {"loss": jnp.mean(loss),
                            **{k: jnp.mean(v) for k, v in metrics.items()}}
+            if opt_cfg.obs_metrics:
+                # per-worker L2 of the RAW (pre-clip) gradients, for the
+                # obs health probes — same opt-in pattern as drift below:
+                # not compiled into an uninstrumented run at all
+                out_metrics["grad_norm"] = opt_lib.global_norm(
+                    grads, batch_ndim=1)
             # divergence stat for the adaptive sync policy (its only
             # consumer — fixed_h never reads it, so don't make its hot loop
             # pay the extra full-parameter reductions). Which statistic is
@@ -299,6 +308,9 @@ def build_train_programs(cfg: ModelConfig, shape: ShapeConfig,
                 new_params, new_state = opt.update(grads, sq, opt_state, params)
             out_metrics = {"loss": loss,
                            **{k: jnp.mean(v) for k, v in metrics.items()}}
+            if opt_cfg.obs_metrics:
+                out_metrics["grad_norm"] = opt_lib.global_norm(
+                    grads, batch_ndim=0)
             return new_params, new_state, out_metrics
 
     # ---------------- batch specs + jit ----------------------------------- #
@@ -595,6 +607,9 @@ def _flat_programs(fs, opt_cfg: OptimizerConfig, mesh, plan, R: int,
                      "b2_local": new_b2}
         out_metrics = {"loss": jnp.mean(loss),
                        **{k: jnp.mean(v) for k, v in metrics.items()}}
+        if opt_cfg.obs_metrics:
+            out_metrics["grad_norm"] = opt_lib.global_norm(
+                grads, batch_ndim=1)
         if staleness:
             delta = g_plane - fstate["g_anchor"]
             d2 = jnp.sum(jnp.square(delta), axis=-1)

@@ -20,7 +20,10 @@ schedule. ``TrainResult`` reports the *measured* sync count/steps and the
 comm bytes they moved, not the static ``2P/H`` formula. ``--trace out.json``
 additionally records the run as a per-worker span timeline (``repro.trace``)
 — the engine's actual sync decisions plus modeled device/wire round costs —
-for Perfetto viewing and trace-driven what-if replay.
+for Perfetto viewing and trace-driven what-if replay. ``--metrics out.jsonl``
+streams per-step sync-health metrics (``repro.obs``: grad norm, drift, B²
+quantiles, EF residual norms, int8 quantization MSE, wire compression
+ratio) as JSONL plus a Prometheus textfile snapshot.
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --reduced \
       --optimizer local_adaalter --H 4 --steps 200 --batch 16 --seq 128
@@ -93,13 +96,25 @@ def train_loop(cfg: ModelConfig, shape: ShapeConfig, opt_cfg: OptimizerConfig,
                mesh=None, plan: Optional[ParallelismPlan] = None,
                non_iid: bool = True, checkpoint_dir: str = "",
                checkpoint_every: int = 0, verbose: bool = True,
-               trace_out: str = "") -> TrainResult:
+               trace_out: str = "", metrics_out: str = "") -> TrainResult:
     """``trace_out`` records the run as a span stream (``repro.trace``):
     one timeline row per worker per step carrying the sync decisions the
     engine actually took, plus modeled device/wire costs on sync rounds —
     the input of the what-if replay engine and the Chrome/Perfetto export.
     All host times (including ``wall_s``) share the monotonic
-    ``time.perf_counter`` clock."""
+    ``time.perf_counter`` clock.
+
+    ``metrics_out`` streams the run's health metrics (``repro.obs``): one
+    JSONL row per step — loss, grad norm, drift, B² quantiles per dtype
+    bucket, and on sync rounds the EF residual norms and quantization MSE —
+    plus a Prometheus textfile snapshot next to it (``<base>.prom``).
+    Both instrumentations share one ``SyncHealthProbe``, so the trace spans
+    and the metrics rows report the same numbers."""
+    if trace_out or metrics_out:
+        # compile the grad-norm health metric into the step programs; an
+        # uninstrumented run's programs stay byte-identical (the emission
+        # is absent, not skipped)
+        opt_cfg = dataclasses.replace(opt_cfg, obs_metrics=True)
     mesh = mesh or make_cpu_mesh()
     plan = plan or resolve_plan(cfg, mesh, optimizer=opt_cfg.name)
     with mesh:
@@ -191,6 +206,22 @@ def train_loop(cfg: ModelConfig, shape: ShapeConfig, opt_cfg: OptimizerConfig,
             engine.import_state(sync_state)
         n_params = count_params(cfg)
 
+        # ---- obs: metrics registry + the shared sync-health probe --------- #
+        from repro.obs import NULL_REGISTRY, SyncHealthProbe
+        registry = NULL_REGISTRY
+        if metrics_out:
+            from repro.obs import MetricsRegistry
+            registry = MetricsRegistry(labels={
+                "arch": cfg.name, "algorithm": opt_cfg.name,
+                "policy": opt_cfg.sync.policy,
+                "codec": opt_cfg.sync.compression or "fp32", "workers": R})
+            registry.open_jsonl(metrics_out)
+        probe = None
+        if registry or trace_out:
+            probe = SyncHealthProbe.build(engine, programs, n_params)
+            if registry:
+                registry.set_many(probe.static_summary())
+
         # ---- trace recorder (repro.trace): spans + modeled round costs ---- #
         recorder = None
         if trace_out:
@@ -229,6 +260,41 @@ def train_loop(cfg: ModelConfig, shape: ShapeConfig, opt_cfg: OptimizerConfig,
                                 "drift": float(st0.drift)},
             })
 
+        # ---- HLO per-op cost attribution (roofline.region_table) --------- #
+        # AOT-lower both step programs and walk their optimized HLO into a
+        # per-fused-region flops/bytes/optimal-seconds table. The replay
+        # engine prices sync overhead from the sync/local optimal ratio
+        # (deterministic program structure, not a noisy difference of two
+        # measured means), and every local_step span carries the roofline-
+        # optimal wall of its program. Costs one extra compile per program
+        # (the AOT cache is separate from the loop's jit cache) — accepted
+        # under opt-in tracing; any lowering failure degrades to a trace
+        # without hlo_cost meta, which replay prices from warm means.
+        hlo_local_s = hlo_extra_s = None
+        if recorder is not None:
+            try:
+                from repro.roofline import region_table
+                bnp = make_train_batch(cfg, shape, ds, start_step,
+                                       n_workers=R if programs.is_local
+                                       else 0)
+                b0 = jax.tree_util.tree_map(jnp.asarray, bnp)
+                tabs = {}
+                for prog_key, prog_fn in (("local_step", programs.local_step),
+                                          ("sync_step", programs.sync_step)):
+                    txt = prog_fn.lower(params, opt_state,
+                                        b0).compile().as_text()
+                    tabs[prog_key] = region_table(
+                        txt, peak_flops=V5E.peak_flops, hbm_bw=V5E.hbm_bw)
+                recorder.meta["hlo_cost"] = {
+                    **tabs, "hw": {"peak_flops": V5E.peak_flops,
+                                   "hbm_bw": V5E.hbm_bw}}
+                hlo_local_s = float(tabs["local_step"]["optimal_s"])
+                hlo_extra_s = max(0.0, float(tabs["sync_step"]["optimal_s"])
+                                  - hlo_local_s)
+            except Exception as e:               # pragma: no cover - backend
+                if verbose:
+                    print(f"HLO cost attribution unavailable: {e}")
+
         losses, ppls = [], []
         t0 = time.perf_counter()
         for step in range(start_step, steps):
@@ -236,7 +302,8 @@ def train_loop(cfg: ModelConfig, shape: ShapeConfig, opt_cfg: OptimizerConfig,
                                         n_workers=R if programs.is_local else 0)
             batch = jax.tree_util.tree_map(jnp.asarray, batch_np)
             do_sync = engine.want_sync(step)
-            t_step = recorder.now() if recorder is not None else 0.0
+            t_step = (recorder.now() if recorder is not None
+                      else time.perf_counter() if registry else 0.0)
             fn = programs.sync_step if do_sync else programs.local_step
             params, opt_state, metrics = fn(params, opt_state, batch)
             # the blocking metric read keeps the device work inside the span
@@ -248,20 +315,32 @@ def train_loop(cfg: ModelConfig, shape: ShapeConfig, opt_cfg: OptimizerConfig,
             engine.observe(step, do_sync,
                            {"drift": drift_val}
                            if engine.wants_drift else None)
+            # ONE health summary feeds both exports (same numbers on the
+            # trace spans and in the metrics rows, by construction)
+            summary = (probe.step_summary(opt_state, metrics,
+                                          synced=do_sync)
+                       if probe is not None else {})
             if recorder is not None:
+                from repro.trace.events import health_span_args
                 dur = recorder.now() - t_step
                 t_end = t_step + dur
+                health = health_span_args(summary)
+                if hlo_local_s is not None:
+                    health["hlo_optimal_s"] = hlo_local_s
                 for w in range(R):
                     recorder.add("local_step", worker=w, step=step,
                                  t0=t_step, dur=dur, synced=do_sync,
                                  loss=loss, drift=drift_val,
                                  sync_since=int(st.since),
-                                 sync_drift=float(st.drift))
+                                 sync_drift=float(st.drift), **health)
                     if do_sync:
+                        enc_args = {}
+                        if hlo_extra_s is not None:
+                            enc_args["hlo_extra_optimal_s"] = hlo_extra_s
                         recorder.add("ef_encode", worker=w, step=step,
                                      t0=t_end, dur=enc_t, modeled=True,
                                      hbm_bytes=enc_bytes,
-                                     codec=engine.codec.name)
+                                     codec=engine.codec.name, **enc_args)
                         recorder.add("collective", worker=w, step=step,
                                      t0=t_end + enc_t, dur=wire_t,
                                      modeled=True, wire_bytes=round_b,
@@ -269,6 +348,18 @@ def train_loop(cfg: ModelConfig, shape: ShapeConfig, opt_cfg: OptimizerConfig,
                                      n_shards=programs.n_shards,
                                      n_collectives=n_coll,
                                      codec=engine.codec.name, workers=R)
+            if registry:
+                step_dur = (dur if recorder is not None
+                            else time.perf_counter() - t_step)
+                registry.counter("steps_total").inc()
+                registry.gauge("loss",
+                               help="train loss (mean over workers)"
+                               ).set(loss)
+                registry.histogram("step_time_s",
+                                   help="host wall of one train step"
+                                   ).observe(step_dur)
+                probe.record(registry, summary, step=step, synced=do_sync)
+                registry.collect(step)
             losses.append(loss)
             ppls.append(math.exp(min(loss, 30.0)))
             if verbose and (step % log_every == 0 or step == steps - 1):
@@ -312,6 +403,16 @@ def train_loop(cfg: ModelConfig, shape: ShapeConfig, opt_cfg: OptimizerConfig,
         # steps actually executed and guard the empty-run case (restore at or
         # past the target used to yield steps=target and a NaN-mean warning).
         final = float(np.mean(losses[-10:])) if losses else float("nan")
+        if registry:
+            registry.gauge("final_loss",
+                           help="mean loss over the last 10 steps").set(final)
+            base = (metrics_out[:-len(".jsonl")]
+                    if metrics_out.endswith(".jsonl") else metrics_out)
+            registry.write_prom(base + ".prom")
+            registry.close()
+            if verbose:
+                print(f"wrote metrics {metrics_out} "
+                      f"(+ Prometheus textfile {base + '.prom'})")
         if recorder is not None:
             recorder.meta["measured"] = {
                 "wall_s": wall, "sync_count": engine.sync_count,
@@ -402,6 +503,13 @@ def main() -> None:
                          "decisions + modeled device/wire costs. Export "
                          "with `python -m repro.trace.chrome`, what-if "
                          "replay with `python -m repro.trace.replay`")
+    ap.add_argument("--metrics", default="", metavar="OUT.jsonl",
+                    help="stream per-step health metrics (repro.obs): one "
+                         "JSONL row per step — loss, raw-grad norm, drift, "
+                         "B² quantiles per dtype bucket, EF residual norms "
+                         "and quantization MSE on sync rounds, wire "
+                         "compression ratio — plus a Prometheus textfile "
+                         "snapshot next to it (OUT.prom)")
     ap.add_argument("--workers", type=int, default=0, metavar="N",
                     help="size of the mesh's data (worker) axis; remaining "
                          "host devices form the model axis, which a --flat "
@@ -444,7 +552,7 @@ def main() -> None:
                      mesh=mesh, non_iid=not args.iid,
                      checkpoint_dir=args.checkpoint_dir,
                      checkpoint_every=args.checkpoint_every,
-                     trace_out=args.trace)
+                     trace_out=args.trace, metrics_out=args.metrics)
     print(f"done in {res.wall_s:.1f}s; final loss {res.final_loss:.4f}; "
           f"{res.sync_count} syncs in {res.steps} steps; measured comm/step "
           f"{res.comm_bytes_per_step / 1e6:.1f} MB (modeled "

@@ -1,0 +1,29 @@
+"""Observability: training-health metrics + bench-regression gating.
+
+The paper's contribution is a measured trade — fewer/cheaper sync rounds
+for a bounded loss delta — and this package watches the *health* side of
+that trade, which traces alone cannot see:
+
+  metrics.py   a lightweight per-worker metrics registry (counters /
+               gauges / histograms) collected host-side once per step and
+               exported as a JSONL stream + a Prometheus textfile
+               (``--metrics`` on ``launch.train`` and ``launch.dryrun``).
+               Zero overhead when disabled: the null registry's methods
+               are no-ops and instrumented code never computes a value.
+  health.py    the sync-health probes the registry collects: per-bucket
+               error-feedback residual norms, quantization MSE of the wire
+               codec, wire compression ratio, the adaptive policy's drift
+               statistic, gradient norm and B² accumulator quantiles —
+               all derived host-side from state the step already
+               materializes (CADA's and Local SGD's convergence knobs).
+  regress.py   the bench-regression detector: diffs freshly produced
+               ``BENCH_*.json`` rows against committed baselines
+               (``benchmarks/baselines/``) field-by-field with stated
+               tolerances and exits nonzero — the CI perf-regression gate.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               NULL_REGISTRY)
+from repro.obs.health import SyncHealthProbe
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
+           "NULL_REGISTRY", "SyncHealthProbe"]

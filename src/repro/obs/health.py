@@ -1,0 +1,224 @@
+"""Sync-health probes: the convergence-relevant state the papers gate on.
+
+CADA (2012.15469) triggers communication on gradient staleness, Stich's
+Local SGD analysis (1805.09767) bounds divergence by the inter-sync drift,
+and this paper's error-feedback codec is sound only while the EF residual
+stays bounded. These probes derive exactly those quantities host-side from
+state the train step already materializes — nothing is added to the
+compiled programs except the (gated) ``grad_norm`` metric emission in
+``launch.steps``:
+
+  grad_norm          per-worker L2 of the raw gradients (pre-clip), read
+                     from the step metrics (emitted when
+                     ``OptimizerConfig.obs_metrics`` is on);
+  drift              the adaptive policy's accumulated-divergence input;
+  ef_residual_norm   per dtype bucket, L2 of the error-feedback residual
+                     after the last sync round — growth here means the
+                     codec is dropping signal faster than EF recycles it;
+  quant_mse          mean squared wire error of the last round. The
+                     residual IS the round's quantization error
+                     (``res = v − wire`` by construction), so this costs
+                     one reduction, no re-encode;
+  b2 quantiles       p50/p90/p99/max of the B² (AdaGrad second-moment)
+                     accumulator per bucket — the paper's Figure-4
+                     "B² keeps growing" story, watchable per step;
+  wire_compression_ratio   static: codec round bytes / fp32 round bytes.
+
+Buckets are the FlatSpace dtype buckets (``bucket_ranges``) on flat runs
+and the parameter-dtype leaf groups on per-leaf runs, so both layouts
+report the same bucket names. One probe serves both the metrics registry
+and the trace recorder (``events.health_span_args``), which is what keeps
+the two reporting the same numbers.
+
+The device-side reductions are jitted once and only run when a consumer
+(registry or trace) is active; residual/MSE summaries additionally only
+run on sync rounds (the residual is constant in between).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["SyncHealthProbe"]
+
+#: B² quantiles exported per bucket.
+B2_QS = (0.5, 0.9, 0.99)
+
+
+def _np(x) -> np.ndarray:
+    return np.asarray(x)
+
+
+class SyncHealthProbe:
+    """Host-side per-step health summary of one training run.
+
+    Build with :meth:`build`; call :meth:`step_summary` once per executed
+    step. Returns a JSON-safe nested dict (see module docstring for the
+    keys); entries whose inputs don't exist for this run (no lossy codec →
+    no residual, SGD → no B²) are simply absent.
+    """
+
+    def __init__(self, *, is_flat: bool, flatspace: Any,
+                 params_abstract: Any, engine: Any, n_params: int) -> None:
+        self.is_flat = bool(is_flat)
+        self.fs = flatspace
+        self.engine = engine
+        self.n_params = int(n_params)
+        self._leaf_dtypes: List[str] = []
+        if not self.is_flat and params_abstract is not None:
+            import jax
+            self._leaf_dtypes = [
+                np.dtype(l.dtype).name
+                for l in jax.tree_util.tree_leaves(params_abstract)]
+        self._fn_b2 = None
+        self._fn_res = None
+
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def build(engine, programs, n_params: int) -> "SyncHealthProbe":
+        params_abs = None
+        if programs.legacy_abstract is not None:
+            params_abs = programs.legacy_abstract[0]
+        return SyncHealthProbe(
+            is_flat=programs.is_flat, flatspace=programs.flatspace,
+            params_abstract=params_abs, engine=engine, n_params=n_params)
+
+    # ------------------------------------------------------------------ #
+    def static_summary(self) -> Dict[str, float]:
+        """Run-constant facts: wire bytes and compression ratio of one
+        sync round under the engine's codec."""
+        n = self.n_params
+        round_b = float(self.engine.round_bytes(n))
+        from repro.core import comm
+        fp32_b = float(comm.sync_payload_bytes(self.engine.algorithm, n))
+        return {
+            "round_wire_bytes": round_b,
+            "wire_compression_ratio": fp32_b / round_b if round_b else 1.0,
+        }
+
+    # ------------------------------------------------------------------ #
+    def _buckets(self, entry) -> List[Tuple[str, Any]]:
+        """``(bucket_name, flattened fp32 array)`` views of one opt-state
+        entry (a plane on flat runs, a params-shaped pytree otherwise)."""
+        import jax
+        import jax.numpy as jnp
+        if self.is_flat:
+            out = {}
+            for name, start, stop in self.fs.bucket_ranges():
+                piece = entry[..., start:stop].reshape(-1)
+                out[name] = (jnp.concatenate([out[name], piece])
+                             if name in out else piece)
+            return sorted(out.items())
+        leaves = jax.tree_util.tree_leaves(entry)
+        dtypes = self._leaf_dtypes or ["float32"] * len(leaves)
+        out = {}
+        for dt, leaf in zip(dtypes, leaves):
+            piece = leaf.astype(jnp.float32).reshape(-1)
+            out[dt] = (jnp.concatenate([out[dt], piece])
+                       if dt in out else piece)
+        return sorted(out.items())
+
+    def _build_b2(self, opt_state):
+        import jax
+        import jax.numpy as jnp
+
+        def fn(state):
+            out = {}
+            for name, flat in self._buckets(state["b2_local"]):
+                qs = jnp.quantile(flat, jnp.asarray(B2_QS))
+                out[name] = {**{f"p{int(q * 100)}": qs[i]
+                                for i, q in enumerate(B2_QS)},
+                             "max": jnp.max(flat)}
+            return out
+
+        return jax.jit(fn)
+
+    def _build_res(self, opt_state):
+        import jax
+        import jax.numpy as jnp
+
+        def fn(state):
+            norms, total_sq, total_n = {}, 0.0, 0
+            for key in ("res_params", "res_b2"):
+                if key not in state:
+                    continue
+                plane_tag = "params" if key == "res_params" else "b2"
+                for name, flat in self._buckets(state[key]):
+                    sq = jnp.sum(jnp.square(flat))
+                    norms[(plane_tag, name)] = jnp.sqrt(sq)
+                    total_sq = total_sq + sq
+                    total_n += flat.size
+            mse = (total_sq / total_n) if total_n else jnp.float32(0.0)
+            return norms, mse
+
+        return jax.jit(fn)
+
+    # ------------------------------------------------------------------ #
+    def step_summary(self, opt_state, metrics: Dict[str, Any], *,
+                     synced: bool) -> Dict[str, Any]:
+        """One step's health dict. ``metrics`` is the step's output-metrics
+        map (device scalars fine — converted once here); residual probes
+        run only when ``synced`` (the EF residual is rewritten exactly by
+        sync rounds)."""
+        out: Dict[str, Any] = {}
+        if "grad_norm" in metrics:
+            g = _np(metrics["grad_norm"]).reshape(-1)
+            out["grad_norm"] = float(g.mean())
+            if g.size > 1:
+                out["grad_norm_per_worker"] = [float(v) for v in g]
+        if "drift" in metrics:
+            out["drift"] = float(_np(metrics["drift"]))
+        has_state = isinstance(opt_state, dict)
+        if has_state and "b2_local" in opt_state:
+            if self._fn_b2 is None:
+                self._fn_b2 = self._build_b2(opt_state)
+            b2 = self._fn_b2(opt_state)
+            out["b2"] = {name: {k: float(_np(v)) for k, v in d.items()}
+                         for name, d in b2.items()}
+        if synced and has_state and "res_params" in opt_state:
+            if self._fn_res is None:
+                self._fn_res = self._build_res(opt_state)
+            norms, mse = self._fn_res(opt_state)
+            out["ef_residual_norm"] = {
+                f"{plane}/{name}": float(_np(v))
+                for (plane, name), v in norms.items()}
+            out["quant_mse"] = float(_np(mse))
+        return out
+
+    # ------------------------------------------------------------------ #
+    def record(self, registry, summary: Dict[str, Any], *,
+               step: int, synced: bool) -> None:
+        """Feed one step's summary into a metrics registry (labeled gauges;
+        grad-norm additionally per worker)."""
+        if not registry:
+            return
+        if "grad_norm" in summary:
+            registry.gauge("grad_norm",
+                           help="L2 of raw grads, mean over workers"
+                           ).set(summary["grad_norm"])
+        for w, v in enumerate(summary.get("grad_norm_per_worker", [])):
+            registry.gauge("grad_norm", worker=w).set(v)
+        if "drift" in summary:
+            registry.gauge("drift",
+                           help="adaptive policy drift statistic"
+                           ).set(summary["drift"])
+        for name, qs in summary.get("b2", {}).items():
+            for q, v in qs.items():
+                registry.gauge("b2", help="B2 accumulator quantiles",
+                               bucket=name, q=q).set(v)
+        for tag, v in summary.get("ef_residual_norm", {}).items():
+            plane, _, bucket = tag.partition("/")
+            registry.gauge("ef_residual_norm",
+                           help="L2 of the EF residual after last sync",
+                           plane=plane, bucket=bucket).set(v)
+        if "quant_mse" in summary:
+            registry.gauge("quant_mse",
+                           help="mean squared wire error of last sync round"
+                           ).set(summary["quant_mse"])
+        if synced:
+            registry.counter("sync_rounds_total").inc()
+            registry.counter(
+                "wire_bytes_total",
+                help="cumulative sync wire bytes (modeled codec payload)"
+            ).inc(self.static_summary()["round_wire_bytes"])

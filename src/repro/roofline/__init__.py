@@ -3,6 +3,8 @@ from repro.roofline.analysis import (
     Hardware, RooflineReport, V5E, analyze, collective_wire_bytes,
     model_flops, parse_collectives,
 )
+from repro.roofline.hlo_cost import RegionCost, region_table
 
 __all__ = ["Hardware", "RooflineReport", "V5E", "analyze",
-           "collective_wire_bytes", "model_flops", "parse_collectives"]
+           "collective_wire_bytes", "model_flops", "parse_collectives",
+           "RegionCost", "region_table"]

@@ -325,61 +325,73 @@ class HloCostModel:
                 best = max(best, int(c.group(1)))
         return best
 
+    def _while_parts(self, op: Op):
+        body = cond = None
+        for kind, name in _CALLEE_ATTR.findall(op.line):
+            if kind == "body":
+                body = name
+            elif kind == "condition":
+                cond = name
+        return body, cond
+
     # ------------------------------------------------------------------ #
+    def _op_cost(self, op: Op) -> Cost:
+        """One op's total contribution (recursing into callees) — the unit
+        the per-computation walk sums and the per-region attribution
+        reports individually."""
+        total = Cost()
+        oc = op.opcode
+        base = oc[:-6] if oc.endswith("-start") else oc
+        if base in COLLECTIVES and not oc.endswith("-done"):
+            total.coll[base] += op.out_bytes
+            total.coll_counts[base] += 1
+            total.bytes += op.out_bytes + self._operand_bytes(op)
+            return total
+        if oc == "fusion":
+            for c in op.callees():
+                total.add(self.cost(c), bytes_too=False)
+            total.bytes += self._fusion_bytes(op)
+            return total
+        if oc == "while":
+            body, cond = self._while_parts(op)
+            trip = self.trip_count(op, cond)
+            if body:
+                total.add(self.cost(body), mult=trip)
+            if cond:
+                total.add(self.cost(cond), mult=trip)
+            return total
+        if oc in ("call", "custom-call", "conditional", "async-start"):
+            callees = op.callees()
+            if oc == "conditional" and callees:
+                costs = [self.cost(c) for c in callees]
+                total.add(max(costs, key=lambda c: c.flops))
+            else:
+                for c in callees:
+                    total.add(self.cost(c))
+            total.bytes += op.out_bytes + self._operand_bytes(op)
+            return total
+        if oc in _NO_BYTES_OPS:
+            return total
+        total.flops += self._op_flops(op)
+        if oc == "dynamic-update-slice":
+            # in-place update: traffic = write + read of the slice only
+            refs = op.operand_refs()
+            upd = (_shape_elems_bytes(self.shape_of.get(refs[1], ""))[1]
+                   if len(refs) > 1 else op.out_bytes)
+            total.bytes += 2 * upd
+        elif oc in ("dynamic-slice", "slice"):
+            total.bytes += 2 * op.out_bytes          # read + write of the slice
+        else:
+            total.bytes += op.out_bytes + self._operand_bytes(op)
+        return total
+
     def cost(self, comp_name: str) -> Cost:
         if comp_name in self._memo:
             return self._memo[comp_name]
         total = Cost()
         self._memo[comp_name] = total              # break cycles defensively
         for op in self.computations.get(comp_name, []):
-            oc = op.opcode
-            base = oc[:-6] if oc.endswith("-start") else oc
-            if base in COLLECTIVES and not oc.endswith("-done"):
-                total.coll[base] += op.out_bytes
-                total.coll_counts[base] += 1
-                total.bytes += op.out_bytes + self._operand_bytes(op)
-                continue
-            if oc == "fusion":
-                for c in op.callees():
-                    total.add(self.cost(c), bytes_too=False)
-                total.bytes += self._fusion_bytes(op)
-                continue
-            if oc == "while":
-                body = cond = None
-                for kind, name in _CALLEE_ATTR.findall(op.line):
-                    if kind == "body":
-                        body = name
-                    elif kind == "condition":
-                        cond = name
-                trip = self.trip_count(op, cond)
-                if body:
-                    total.add(self.cost(body), mult=trip)
-                if cond:
-                    total.add(self.cost(cond), mult=trip)
-                continue
-            if oc in ("call", "custom-call", "conditional", "async-start"):
-                callees = op.callees()
-                if oc == "conditional" and callees:
-                    costs = [self.cost(c) for c in callees]
-                    total.add(max(costs, key=lambda c: c.flops))
-                else:
-                    for c in callees:
-                        total.add(self.cost(c))
-                total.bytes += op.out_bytes + self._operand_bytes(op)
-                continue
-            if oc in _NO_BYTES_OPS:
-                continue
-            total.flops += self._op_flops(op)
-            if oc == "dynamic-update-slice":
-                # in-place update: traffic = write + read of the slice only
-                refs = op.operand_refs()
-                upd = (_shape_elems_bytes(self.shape_of.get(refs[1], ""))[1]
-                       if len(refs) > 1 else op.out_bytes)
-                total.bytes += 2 * upd
-            elif oc in ("dynamic-slice", "slice"):
-                total.bytes += 2 * op.out_bytes      # read + write of the slice
-            else:
-                total.bytes += op.out_bytes + self._operand_bytes(op)
+            total.add(self._op_cost(op))
         self._memo[comp_name] = total
         return total
 
@@ -388,6 +400,102 @@ class HloCostModel:
             self.entry = max(self.computations,
                              key=lambda k: len(self.computations[k]))
         return self.cost(self.entry)
+
+    # ------------------------------------------------------------------ #
+    def region_costs(self, comp_name: Optional[str] = None
+                     ) -> List["RegionCost"]:
+        """Per-fused-region cost attribution of one computation (default:
+        entry), in program order.
+
+        Post-optimization HLO is a flat sequence of fused regions: every
+        entry-level ``fusion`` / ``while`` (the layer scan) / collective /
+        ``call``-like op becomes its own region carrying exactly the cost
+        the entry walk charges it, and the loose elementwise/reduce ops
+        between them are merged into one trailing ``(unfused)`` region —
+        so the region list SUMS to :meth:`cost` of the same computation
+        (pinned by tests). ``while`` regions record their trip count.
+        """
+        if comp_name is None:
+            if not self.entry:
+                self.entry = max(self.computations,
+                                 key=lambda k: len(self.computations[k]))
+            comp_name = self.entry
+        regions: List[RegionCost] = []
+        loose = Cost()
+        n_loose = 0
+        for op in self.computations.get(comp_name, []):
+            c = self._op_cost(op)
+            if not (c.flops or c.bytes or any(c.coll.values())):
+                continue
+            oc = op.opcode
+            base = oc[:-6] if oc.endswith("-start") else oc
+            own = (oc in ("fusion", "while", "call", "custom-call",
+                          "conditional", "async-start")
+                   or base in COLLECTIVES)
+            if own:
+                trip = 1
+                if oc == "while":
+                    trip = self.trip_count(op, self._while_parts(op)[1])
+                regions.append(RegionCost(
+                    name=op.name, opcode=oc, flops=c.flops, bytes=c.bytes,
+                    coll_bytes=sum(c.coll.values()), trip=trip))
+            else:
+                loose.add(c)
+                n_loose += 1
+        if loose.flops or loose.bytes:
+            regions.append(RegionCost(
+                name=f"(unfused x{n_loose})", opcode="(unfused)",
+                flops=loose.flops, bytes=loose.bytes,
+                coll_bytes=sum(loose.coll.values())))
+        return regions
+
+
+@dataclasses.dataclass
+class RegionCost:
+    """Cost of one entry-level fused region (see ``region_costs``)."""
+
+    name: str
+    opcode: str
+    flops: float
+    bytes: float
+    coll_bytes: float = 0.0
+    trip: int = 1
+
+    def optimal_s(self, peak_flops: float, hbm_bw: float) -> float:
+        """Roofline-optimal seconds: max of the compute and memory times
+        (collective bytes are priced by the alpha-beta fabric model, not
+        here)."""
+        return max(self.flops / peak_flops if peak_flops else 0.0,
+                   self.bytes / hbm_bw if hbm_bw else 0.0)
+
+
+def region_table(hlo_text: str, *, peak_flops: float, hbm_bw: float,
+                 top: int = 12) -> Dict[str, object]:
+    """JSON-safe per-region cost table of one compiled program — the
+    payload ``train --trace`` / ``dryrun --trace`` attach to their spans
+    and ``trace.replay`` prices sync overhead from.
+
+    ``regions`` holds the ``top`` most expensive regions by roofline-
+    optimal seconds (the tail is summarized in ``dropped_optimal_s``, so
+    truncation is visible, never silent); the totals are the FULL
+    program's.
+    """
+    model = HloCostModel(hlo_text)
+    regions = model.region_costs()
+    rows = [{"region": r.name, "opcode": r.opcode, "trip": r.trip,
+             "flops": r.flops, "bytes": r.bytes, "coll_bytes": r.coll_bytes,
+             "optimal_s": r.optimal_s(peak_flops, hbm_bw)}
+            for r in regions]
+    rows.sort(key=lambda r: r["optimal_s"], reverse=True)
+    total = model.entry_cost()
+    total_opt = max(total.flops / peak_flops if peak_flops else 0.0,
+                    total.bytes / hbm_bw if hbm_bw else 0.0)
+    kept = rows[:top] if top else rows
+    dropped = sum(r["optimal_s"] for r in rows[len(kept):])
+    return {"flops": total.flops, "bytes": total.bytes,
+            "coll_bytes": sum(total.coll.values()),
+            "optimal_s": total_opt, "n_regions": len(rows),
+            "dropped_optimal_s": dropped, "regions": kept}
 
 
 def hlo_cost(hlo_text: str) -> Cost:

@@ -16,11 +16,21 @@ Span kinds (``SPAN_KINDS``):
                and accumulated ``sync_drift`` at decision time, and the
                per-step drift statistic ``drift`` the adaptive policy
                consumed — everything the replay engine needs to re-derive
-               the schedule without re-running the model.
+               the schedule without re-running the model. Under
+               ``--metrics``/``--trace`` instrumentation the step span also
+               carries the health numbers the metrics registry exports —
+               ``grad_norm`` (raw-grad L2) and the per-bucket ``b2``
+               quantile summary (:func:`health_span_args`) — plus
+               ``hlo_optimal_s``, the roofline-optimal wall of the step's
+               compiled program from the per-region HLO cost walk
+               (``roofline.region_table``). All of these are plain ``args``
+               entries: no schema change, lossless round-trip.
   ef_encode    the device-side error-feedback encode of one sync round —
                MODELED (``SyncEngine.modeled_encode_hbm_bytes`` over the
                roofline HBM bandwidth), since a CPU host cannot time the
-               TPU-side pass.
+               TPU-side pass. ``hlo_extra_optimal_s`` (when present) is the
+               HLO-derived roofline extra of the sync-step program over the
+               local-step program — the cost-model view of the same encode.
   collective   the wire transfer of one sync round — MODELED by the
                alpha-beta ``comm.FabricModel.collective_time`` (the
                in-process simulation moves no real bytes). Carries the
@@ -145,6 +155,23 @@ class Trace:
     def load(path: str) -> "Trace":
         with open(path) as f:
             return Trace.from_dict(from_jsonable(json.load(f)))
+
+
+def health_span_args(summary: Dict[str, Any]) -> Dict[str, Any]:
+    """The subset of a ``obs.health.SyncHealthProbe.step_summary`` that
+    belongs on the step span: ``grad_norm`` and the per-bucket ``b2``
+    quantile summary. The trace and the metrics registry are fed from the
+    SAME summary dict, so the two exports report the same numbers (drift
+    already rides the span as the replay engine's input; the sync-round
+    residual/MSE probes stay registry-only — they describe the round, not
+    the step). Values are already plain floats (JSON-safe, lossless
+    round-trip through save/load and the Chrome exporter)."""
+    out: Dict[str, Any] = {}
+    if "grad_norm" in summary:
+        out["grad_norm"] = summary["grad_norm"]
+    if "b2" in summary:
+        out["b2"] = {name: dict(qs) for name, qs in summary["b2"].items()}
+    return out
 
 
 class TraceRecorder:

@@ -1,0 +1,263 @@
+"""HLO cost-walk parser edge cases (roofline/hlo_cost.py).
+
+Hand-written optimized-HLO snippets pin the rules the region attribution
+and the replay pricing depend on: fusion byte accounting (sliced big
+operands, in-place dynamic-update-slice roots), while-loop trip counts
+(backend_config vs condition-constant fallback), dot/convolution flop
+rules, and the sums-to-entry-cost invariant of ``region_costs``.
+"""
+import pytest
+
+from repro.roofline.hlo_cost import HloCostModel, hlo_cost, region_table
+
+
+def _module(body: str) -> str:
+    return "HloModule test\n\n" + body
+
+
+# --------------------------------------------------------------------------- #
+# flop rules
+# --------------------------------------------------------------------------- #
+DOT = _module("""
+ENTRY %main (x: f32[8,32], y: f32[32,16]) -> f32[8,16] {
+  %x = f32[8,32]{1,0} parameter(0)
+  %y = f32[32,16]{1,0} parameter(1)
+  ROOT %d = f32[8,16]{1,0} dot(%x, %y), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+""")
+
+
+def test_dot_flops_use_contracting_dims():
+    c = hlo_cost(DOT)
+    # 2 * out_elems(128) * contracted(32)
+    assert c.flops == pytest.approx(2.0 * 8 * 16 * 32)
+    # bytes: out 512 + operands 1024 + 2048
+    assert c.bytes == pytest.approx(8 * 16 * 4 + 8 * 32 * 4 + 32 * 16 * 4)
+
+
+CONV = _module("""
+ENTRY %main (in: f32[1,10,10,4], k: f32[3,3,4,16]) -> f32[1,8,8,16] {
+  %in = f32[1,10,10,4]{3,2,1,0} parameter(0)
+  %k = f32[3,3,4,16]{3,2,1,0} parameter(1)
+  ROOT %cv = f32[1,8,8,16]{3,2,1,0} convolution(%in, %k), window={size=3x3}, dim_labels=b01f_01io->b01f
+}
+""")
+
+
+def test_conv_flops_use_window_and_cin():
+    c = hlo_cost(CONV)
+    # 2 * out_elems(1024) * window(3x3) * cin(4)
+    assert c.flops == pytest.approx(2.0 * 1024 * 9 * 4)
+
+
+# --------------------------------------------------------------------------- #
+# while trip counts
+# --------------------------------------------------------------------------- #
+WHILE_BODY = """
+%cond (cp: (s32[], f32[128])) -> pred[] {
+  %cp = (s32[], f32[128]{0}) parameter(0)
+  %cg = s32[] get-tuple-element(%cp), index=0
+  %climit = s32[] constant(7)
+  ROOT %lt = pred[] compare(%cg, %climit), direction=LT
+}
+
+%body (bp: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %bp = (s32[], f32[128]{0}) parameter(0)
+  %bg0 = s32[] get-tuple-element(%bp), index=0
+  %bone = s32[] constant(1)
+  %bnext = s32[] add(%bg0, %bone)
+  %bg1 = f32[128]{0} get-tuple-element(%bp), index=1
+  %bmul = f32[128]{0} multiply(%bg1, %bg1)
+  ROOT %bt = (s32[], f32[128]{0}) tuple(%bnext, %bmul)
+}
+"""
+
+WHILE_KNOWN = _module(WHILE_BODY + """
+ENTRY %main (init: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %init = (s32[], f32[128]{0}) parameter(0)
+  ROOT %w = (s32[], f32[128]{0}) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+}
+""")
+
+WHILE_FALLBACK = _module(WHILE_BODY + """
+ENTRY %main (init: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %init = (s32[], f32[128]{0}) parameter(0)
+  ROOT %w = (s32[], f32[128]{0}) while(%init), condition=%cond, body=%body
+}
+""")
+
+# one body iteration: add(1 flop) + multiply(128 flops)
+_BODY_FLOPS = 129.0
+
+
+def test_while_uses_known_trip_count():
+    c = hlo_cost(WHILE_KNOWN)
+    assert c.flops == pytest.approx(5 * _BODY_FLOPS)
+
+
+def test_while_falls_back_to_condition_constant():
+    # no backend_config: the largest integer constant in the condition (7)
+    # bounds the loop; the body's own constant(1) must NOT win
+    c = hlo_cost(WHILE_FALLBACK)
+    assert c.flops == pytest.approx(7 * _BODY_FLOPS)
+
+
+def test_while_region_records_trip():
+    model = HloCostModel(WHILE_KNOWN)
+    regions = model.region_costs()
+    whiles = [r for r in regions if r.opcode == "while"]
+    assert len(whiles) == 1 and whiles[0].trip == 5
+
+
+# --------------------------------------------------------------------------- #
+# fusion byte accounting
+# --------------------------------------------------------------------------- #
+FUSION_SLICE = _module("""
+%fused_slice (p0: f32[1048576], p1: s32[]) -> f32[32] {
+  %p0 = f32[1048576]{0} parameter(0)
+  %p1 = s32[] parameter(1)
+  %ds = f32[32]{0} dynamic-slice(%p0, %p1), dynamic_slice_sizes={32}
+  ROOT %neg = f32[32]{0} negate(%ds)
+}
+
+ENTRY %main (big: f32[1048576], i: s32[]) -> f32[32] {
+  %big = f32[1048576]{0} parameter(0)
+  %i = s32[] parameter(1)
+  ROOT %f = f32[32]{0} fusion(%big, %i), kind=kLoop, calls=%fused_slice
+}
+""")
+
+
+def test_fusion_charges_slice_not_full_operand():
+    c = hlo_cost(FUSION_SLICE)
+    # the 4 MB buffer is only dynamic-sliced inside the fusion: traffic is
+    # the 128 B slice + the scalar index + the 128 B output, NOT 4 MB
+    assert c.bytes == pytest.approx(32 * 4 + 4 + 32 * 4)
+    assert c.flops == pytest.approx(32)           # the negate
+
+
+FUSION_DUS = _module("""
+%fused_dus (p0: f32[1048576], p1: f32[256], p2: s32[]) -> f32[1048576] {
+  %p0 = f32[1048576]{0} parameter(0)
+  %p1 = f32[256]{0} parameter(1)
+  %p2 = s32[] parameter(2)
+  ROOT %dus = f32[1048576]{0} dynamic-update-slice(%p0, %p1, %p2)
+}
+
+ENTRY %main (buf: f32[1048576], upd: f32[256], i: s32[]) -> f32[1048576] {
+  %buf = f32[1048576]{0} parameter(0)
+  %upd = f32[256]{0} parameter(1)
+  %i = s32[] parameter(2)
+  ROOT %f = f32[1048576]{0} fusion(%buf, %upd, %i), kind=kLoop, calls=%fused_dus
+}
+""")
+
+
+def test_fusion_dus_root_writes_update_slice_only():
+    c = hlo_cost(FUSION_DUS)
+    # in-place DUS: read the target slice (via the min() on the operand,
+    # 1024 B), read the update (1024 B) + index (4 B), write 2x1024 B out
+    assert c.bytes == pytest.approx(1024 + 1024 + 4 + 2 * 1024)
+
+
+FUSION_MIXED = _module("""
+%fused_mixed (p0: f32[1048576]) -> f32[1048576] {
+  %p0 = f32[1048576]{0} parameter(0)
+  ROOT %ng = f32[1048576]{0} negate(%p0)
+}
+
+ENTRY %main (big: f32[1048576]) -> f32[1048576] {
+  %big = f32[1048576]{0} parameter(0)
+  ROOT %f = f32[1048576]{0} fusion(%big), kind=kLoop, calls=%fused_mixed
+}
+""")
+
+
+def test_fusion_elementwise_consumer_charges_full_operand():
+    # the big operand is consumed elementwise (negate), not sliced: the
+    # slice-only discount must NOT apply
+    c = hlo_cost(FUSION_MIXED)
+    assert c.bytes == pytest.approx(2 * 1048576 * 4)
+
+
+# --------------------------------------------------------------------------- #
+# region attribution
+# --------------------------------------------------------------------------- #
+COMPOSITE = _module(WHILE_BODY + """
+%fused_add (fa: f32[128], fb: f32[128]) -> f32[128] {
+  %fa = f32[128]{0} parameter(0)
+  %fb = f32[128]{0} parameter(1)
+  ROOT %fadd = f32[128]{0} add(%fa, %fb)
+}
+
+ENTRY %main (init: (s32[], f32[128]), v: f32[128]) -> f32[128] {
+  %init = (s32[], f32[128]{0}) parameter(0)
+  %v = f32[128]{0} parameter(1)
+  %w = (s32[], f32[128]{0}) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  %wv = f32[128]{0} get-tuple-element(%w), index=1
+  %f = f32[128]{0} fusion(%wv, %v), kind=kLoop, calls=%fused_add
+  %ar = f32[128]{0} all-reduce(%f), replica_groups={}, to_apply=%fused_add
+  %e1 = f32[128]{0} exponential(%ar)
+  ROOT %e2 = f32[128]{0} tanh(%e1)
+}
+""")
+
+
+def test_regions_sum_to_entry_cost():
+    model = HloCostModel(COMPOSITE)
+    total = model.entry_cost()
+    regions = model.region_costs()
+    assert sum(r.flops for r in regions) == pytest.approx(total.flops)
+    assert sum(r.bytes for r in regions) == pytest.approx(total.bytes)
+    assert (sum(r.coll_bytes for r in regions)
+            == pytest.approx(sum(total.coll.values())))
+
+
+def test_region_kinds_and_unfused_merge():
+    regions = HloCostModel(COMPOSITE).region_costs()
+    kinds = [r.opcode for r in regions]
+    assert kinds.count("while") == 1
+    assert kinds.count("fusion") == 1
+    assert kinds.count("all-reduce") == 1
+    # the loose exponential + tanh merge into ONE trailing region
+    unfused = [r for r in regions if r.opcode == "(unfused)"]
+    assert len(unfused) == 1
+    assert unfused[0].flops == pytest.approx(2 * 128)
+    coll = [r for r in regions if r.opcode == "all-reduce"][0]
+    assert coll.coll_bytes == pytest.approx(128 * 4)
+
+
+def test_region_table_truncation_is_visible():
+    tab = region_table(COMPOSITE, peak_flops=1e12, hbm_bw=1e11, top=1)
+    assert tab["n_regions"] == 4
+    assert len(tab["regions"]) == 1
+    # the dropped tail is summarized, and kept + dropped covers every region
+    full = region_table(COMPOSITE, peak_flops=1e12, hbm_bw=1e11, top=0)
+    all_opt = sum(r["optimal_s"] for r in full["regions"])
+    kept = tab["regions"][0]["optimal_s"]
+    assert kept + tab["dropped_optimal_s"] == pytest.approx(all_opt)
+    # totals stay FULL-program regardless of truncation
+    assert tab["flops"] == full["flops"] and tab["bytes"] == full["bytes"]
+    # rows are sorted most-expensive-first
+    opts = [r["optimal_s"] for r in full["regions"]]
+    assert opts == sorted(opts, reverse=True)
+
+
+def test_region_table_on_real_compiled_program():
+    # end-to-end: a jitted program's optimized HLO parses and the totals
+    # match the entry-cost walk
+    import jax
+    import jax.numpy as jnp
+
+    def f(x, y):
+        return jnp.tanh(x @ y).sum()
+
+    x = jnp.ones((32, 64), jnp.float32)
+    y = jnp.ones((64, 16), jnp.float32)
+    txt = jax.jit(f).lower(x, y).compile().as_text()
+    tab = region_table(txt, peak_flops=1e12, hbm_bw=1e11)
+    total = hlo_cost(txt)
+    assert tab["flops"] == pytest.approx(total.flops)
+    assert tab["bytes"] == pytest.approx(total.bytes)
+    assert tab["n_regions"] >= 1
+    assert tab["flops"] >= 2.0 * 32 * 16 * 64    # at least the matmul

@@ -1,0 +1,288 @@
+"""Observability subsystem (repro.obs): metrics registry semantics, JSONL +
+Prometheus export formats, the null-registry zero-overhead contract, the
+sync-health probe on a real instrumented run (same numbers on the trace
+spans and in the metrics rows), and the bench-regression gate's stated
+tolerances including its nonzero exit on an injected regression.
+"""
+import json
+import math
+import os
+
+import pytest
+
+from repro.obs import (Counter, Gauge, Histogram, MetricsRegistry,
+                       NULL_REGISTRY)
+from repro.obs.regress import (compare_rows, field_tolerance, main as
+                               regress_main)
+
+
+# --------------------------------------------------------------------------- #
+# registry
+# --------------------------------------------------------------------------- #
+def test_counter_is_monotone():
+    r = MetricsRegistry()
+    c = r.counter("steps_total")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == pytest.approx(3.5)
+    with pytest.raises(ValueError, match="cannot decrease"):
+        c.inc(-1)
+
+
+def test_gauge_keeps_last_value_and_tags_nonfinite():
+    r = MetricsRegistry()
+    g = r.gauge("loss")
+    g.set(2.0)
+    g.set(1.5)
+    assert g.value == 1.5
+    g.set(float("inf"))
+    assert math.isnan(g.value)
+
+
+def test_histogram_summary_quantiles():
+    r = MetricsRegistry()
+    h = r.histogram("step_time_s")
+    for v in range(1, 101):
+        h.observe(float(v))
+    s = h.summary()
+    assert s["count"] == 100 and s["min"] == 1.0 and s["max"] == 100.0
+    assert s["sum"] == pytest.approx(5050.0)
+    assert 45 <= s["p50"] <= 55 and 85 <= s["p90"] <= 95
+    assert s["p99"] >= 98
+
+
+def test_labeled_metrics_are_distinct():
+    r = MetricsRegistry()
+    r.gauge("b2", bucket="float32", q="p50").set(1.0)
+    r.gauge("b2", bucket="bfloat16", q="p50").set(2.0)
+    snap = r.snapshot()["metrics"]
+    assert snap["b2{bucket=float32,q=p50}"] == 1.0
+    assert snap["b2{bucket=bfloat16,q=p50}"] == 2.0
+
+
+def test_kind_collision_raises():
+    r = MetricsRegistry()
+    r.counter("x")
+    with pytest.raises(ValueError, match="already registered"):
+        r.gauge("x")
+
+
+def test_collect_appends_rows_and_jsonl(tmp_path):
+    path = str(tmp_path / "m.jsonl")
+    r = MetricsRegistry(labels={"arch": "t"})
+    r.open_jsonl(path)
+    r.counter("steps_total").inc()
+    r.gauge("loss").set(3.0)
+    r.collect(0)
+    r.gauge("loss").set(float("nan"))       # must stay strict-RFC JSON
+    r.collect(1)
+    r.close()
+    lines = [json.loads(l) for l in open(path)]
+    assert lines[0] == {"stream": "repro.obs.metrics", "labels": {"arch": "t"}}
+    assert lines[1]["step"] == 0 and lines[1]["metrics"]["loss"] == 3.0
+    assert lines[2]["metrics"]["loss"] is None      # NaN -> null
+    assert len(r.rows) == 2
+
+
+def test_prom_text_format(tmp_path):
+    r = MetricsRegistry(labels={"run": "a b"})
+    r.gauge("loss", help="train loss").set(2.5)
+    r.counter("steps_total").inc(3)
+    r.histogram("step_time_s").observe(1.0)
+    txt = r.prom_text()
+    assert "# HELP repro_loss train loss" in txt
+    assert "# TYPE repro_loss gauge" in txt
+    assert 'repro_loss{run="a b"} 2.5' in txt
+    assert "# TYPE repro_steps_total counter" in txt
+    assert "# TYPE repro_step_time_s summary" in txt
+    assert 'quantile="0.5"' in txt
+    assert 'repro_step_time_s_count{run="a b"} 1' in txt
+    # atomic write leaves no temp file behind
+    path = str(tmp_path / "m.prom")
+    r.write_prom(path)
+    assert open(path).read() == txt
+    assert not os.path.exists(path + ".tmp")
+
+
+def test_null_registry_is_free_and_falsy():
+    assert not NULL_REGISTRY
+    # every instrument is the shared no-op; nothing is recorded
+    NULL_REGISTRY.counter("a").inc()
+    NULL_REGISTRY.gauge("b").set(1.0)
+    NULL_REGISTRY.histogram("c").observe(1.0)
+    assert NULL_REGISTRY.collect(0) == {}
+    assert NULL_REGISTRY.snapshot() == {"metrics": {}, "hists": {}}
+    NULL_REGISTRY.open_jsonl("/nonexistent/dir/never_opened.jsonl")
+    NULL_REGISTRY.write_prom("/nonexistent/dir/never_written.prom")
+    assert isinstance(NULL_REGISTRY.counter("a"), type(NULL_REGISTRY.gauge("b")))
+
+
+# --------------------------------------------------------------------------- #
+# instrumented run: probe + registry + trace report the same numbers
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def metrics_run(tmp_path_factory):
+    from repro.configs import OptimizerConfig, ShapeConfig, get_arch, reduced
+    from repro.configs.base import SyncConfig
+    from repro.launch.train import train_loop
+    from repro.trace import Trace
+    tmp = tmp_path_factory.mktemp("obs")
+    cfg = reduced(get_arch("biglstm"), vocab=128)
+    shape = ShapeConfig(name="obs", seq_len=32, global_batch=8, kind="train")
+    opt = OptimizerConfig.from_sync(
+        SyncConfig(compression="int8"), name="local_adaalter", lr=0.5, H=3,
+        warmup_steps=5)
+    mpath, tpath = str(tmp / "m.jsonl"), str(tmp / "t.json")
+    res = train_loop(cfg, shape, opt, steps=9, verbose=False,
+                     trace_out=tpath, metrics_out=mpath)
+    rows = [json.loads(l) for l in open(mpath)]
+    return res, rows, Trace.load(tpath), mpath
+
+
+def test_metrics_stream_has_one_row_per_step(metrics_run):
+    res, rows, _, _ = metrics_run
+    assert rows[0]["stream"] == "repro.obs.metrics"
+    body = rows[1:]
+    assert [r["step"] for r in body] == list(range(9))
+    for r in body:
+        m = r["metrics"]
+        assert "loss" in m and "grad_norm" in m
+        assert m["steps_total"] == r["step"] + 1
+        assert m["wire_compression_ratio"] == pytest.approx(3.938, abs=0.1)
+        assert any(k.startswith("b2{") for k in m)
+
+
+def test_sync_round_probes_only_on_sync_steps(metrics_run):
+    res, rows, _, _ = metrics_run
+    body = rows[1:]
+    first_sync = res.sync_steps[0]
+    pre = body[first_sync - 1]["metrics"]
+    at = body[first_sync]["metrics"]
+    assert not any(k.startswith("ef_residual_norm") for k in pre)
+    assert any(k.startswith("ef_residual_norm") for k in at)
+    assert at["quant_mse"] > 0                 # int8 is lossy
+    assert at["sync_rounds_total"] == 1
+    assert at["wire_bytes_total"] == pytest.approx(
+        at["round_wire_bytes"])
+
+
+def test_trace_and_metrics_report_same_numbers(metrics_run):
+    # satellite contract: ONE probe feeds both exports — per step, the
+    # span's grad_norm/b2 equal the metrics row's gauges exactly
+    _, rows, trace, _ = metrics_run
+    by_step = {r["step"]: r["metrics"] for r in rows[1:]}
+    for s in trace.by_name("local_step"):
+        m = by_step[s.step]
+        assert s.args["grad_norm"] == m["grad_norm"]
+        for bucket, qs in s.args["b2"].items():
+            for q, v in qs.items():
+                assert m[f"b2{{bucket={bucket},q={q}}}"] == v
+        assert s.args["loss"] == m["loss"]
+
+
+def test_prom_file_written_next_to_jsonl(metrics_run):
+    _, _, _, mpath = metrics_run
+    ppath = mpath[:-len(".jsonl")] + ".prom"
+    txt = open(ppath).read()
+    assert "# TYPE repro_loss gauge" in txt
+    assert "repro_final_loss" in txt
+    assert "# TYPE repro_step_time_s summary" in txt
+
+
+def test_uninstrumented_config_has_no_grad_norm():
+    # obs_metrics=False: the emission is not compiled in at all
+    from repro.configs import OptimizerConfig
+    assert OptimizerConfig().obs_metrics is False
+
+
+# --------------------------------------------------------------------------- #
+# bench-regression gate
+# --------------------------------------------------------------------------- #
+def test_field_tolerances_are_the_stated_table():
+    assert field_tolerance("us_per_call") is None          # timing: skipped
+    assert field_tolerance("wall_s") is None
+    assert field_tolerance("trace") is None                # path: skipped
+    assert field_tolerance("final_loss") == 0.02
+    assert field_tolerance("sync_count") == 0.35
+    assert field_tolerance("launches") == 1e-6             # modeled: strict
+    assert field_tolerance("modeled_hbm_mb") == 1e-6
+    # nested paths match on the LEAF name
+    assert field_tolerance("wall.ms_per_step") is None
+    assert field_tolerance("per_leaf.collectives") == 1e-6
+    # structural field whose name merely CONTAINS 'ms_per' must stay gated
+    assert field_tolerance("pad_elems_per_step") == 1e-6
+
+
+def _rows(**over):
+    row = {"bench": "b", "method": "m", "launches": 3, "final_loss": 2.0,
+           "us_per_call": 10.0, "gate_ok": True, "sync_count": 10,
+           "sizes": [1, 2, 3]}
+    row.update(over)
+    return [row]
+
+
+def test_compare_rows_clean_and_timing_ignored():
+    assert compare_rows(_rows(), _rows(us_per_call=99.0)) == []
+
+
+def test_compare_rows_catches_modeled_drift():
+    fails = compare_rows(_rows(), _rows(launches=4))
+    assert len(fails) == 1 and "launches" in fails[0]["reason"]
+
+
+def test_compare_rows_loss_tolerance():
+    assert compare_rows(_rows(), _rows(final_loss=2.0 * 1.015)) == []
+    assert compare_rows(_rows(), _rows(final_loss=2.2))
+
+
+def test_compare_rows_schedule_tolerance():
+    assert compare_rows(_rows(), _rows(sync_count=12)) == []      # +20%
+    assert compare_rows(_rows(), _rows(sync_count=20))            # +100%
+
+
+def test_compare_rows_boolean_gate_and_lists():
+    assert compare_rows(_rows(), _rows(gate_ok=False))
+    assert compare_rows(_rows(), _rows(sizes=[1, 2, 4]))
+    assert compare_rows(_rows(), _rows(sizes=[1, 2]))
+
+
+def test_compare_rows_missing_row_is_a_regression():
+    fails = compare_rows(_rows(), [])
+    assert fails and "missing" in fails[0]["reason"]
+    # extra fresh rows are fine (new coverage needs no baseline)
+    assert compare_rows(_rows(), _rows() + [{"bench": "new", "x": 1}]) == []
+
+
+def test_regress_cli_clean_then_injected_regression(tmp_path, capsys):
+    base = tmp_path / "baselines"
+    fresh = tmp_path / "fresh"
+    base.mkdir()
+    fresh.mkdir()
+    rows = _rows()
+    (base / "BENCH_x.json").write_text(json.dumps(rows))
+    (fresh / "BENCH_x.json").write_text(json.dumps(rows))
+    regress_main(["--baselines", str(base), "--fresh", str(fresh)])
+    assert "ok" in capsys.readouterr().out
+
+    bad = _rows(launches=6, us_per_call=999.0)     # timing drift must NOT trip
+    (fresh / "BENCH_x.json").write_text(json.dumps(bad))
+    report = tmp_path / "report.json"
+    with pytest.raises(SystemExit) as e:
+        regress_main(["--baselines", str(base), "--fresh", str(fresh),
+                      "--report", str(report)])
+    assert e.value.code == 1
+    rep = json.loads(report.read_text())
+    assert rep["failures"] and "launches" in rep["failures"][0]["reason"]
+    assert not any("us_per_call" in f["reason"] for f in rep["failures"])
+
+
+def test_regress_cli_allow_missing(tmp_path, capsys):
+    base = tmp_path / "baselines"
+    base.mkdir()
+    (base / "BENCH_x.json").write_text(json.dumps(_rows()))
+    regress_main(["--baselines", str(base), "--fresh", str(tmp_path),
+                  "--allow-missing"])
+    assert "skipped" in capsys.readouterr().out
+    # without --allow-missing the absent fresh file IS a failure
+    with pytest.raises(SystemExit):
+        regress_main(["--baselines", str(base), "--fresh", str(tmp_path)])

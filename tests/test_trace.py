@@ -369,3 +369,104 @@ def test_hand_trace_wire_term_matches_alpha_beta():
     per_round = comm.sync_payload_bytes("local_adaalter", 1000)
     expect = fabric.collective_time(per_round, 8, 8)    # 4 leaves x 2
     assert r.comm_s == pytest.approx(2 * expect)
+
+
+# --------------------------------------------------------------------------- #
+# HLO-priced sync overhead (PR 10)
+# --------------------------------------------------------------------------- #
+def _with_hlo(trace, local_s, sync_s):
+    trace.meta["hlo_cost"] = {
+        "local_step": {"optimal_s": local_s, "flops": 1.0, "bytes": 1.0,
+                       "regions": []},
+        "sync_step": {"optimal_s": sync_s, "flops": 1.0, "bytes": 1.0,
+                      "regions": []},
+        "hw": {"peak_flops": 1.0, "hbm_bw": 1.0}}
+    return trace
+
+
+def test_hlo_priced_overhead_exact_arithmetic():
+    # sync/local optimal ratio 1.5 -> rel overhead 0.5, anchored to the
+    # warm local mean (1.0 s): each round costs 0.5 s instead of the
+    # measured 2.0 s — the cost model's number, not the warm-mean diff
+    trace = _with_hlo(_hand_trace(), local_s=2e-3, sync_s=3e-3)
+    r = replay(trace)
+    assert r.priced_from == "hlo_regions"
+    assert r.compute_s == pytest.approx(6.0)
+    assert r.sync_overhead_s == pytest.approx(2 * 0.5 * 1.0)
+    assert r.wall_s == pytest.approx(7.0)
+    v = validate(trace)
+    assert v["priced_from"] == "hlo_regions"
+    # measured warm wall is 10.0; the gate now genuinely tests the model
+    assert v["ratio"] == pytest.approx(7.0 / 10.0)
+
+
+def test_hlo_ratio_below_one_clamps_to_zero_overhead():
+    trace = _with_hlo(_hand_trace(), local_s=3e-3, sync_s=2e-3)
+    r = replay(trace)
+    assert r.priced_from == "hlo_regions"
+    assert r.sync_overhead_s == 0.0
+
+
+def test_hlo_pricing_skipped_on_all_sync_trace():
+    # H=1: compute_est already IS the warm sync mean — adding a ratio-
+    # priced extra on top would double-charge every round
+    rec = TraceRecorder(meta={**_hand_trace().meta, "H": 1})
+    t = 0.0
+    for step in range(6):
+        for w in range(2):
+            rec.add("local_step", worker=w, step=step, t0=t, dur=0.5,
+                    synced=True, loss=1.0, drift=0.0)
+        t += 0.5
+    trace = _with_hlo(rec.freeze(), local_s=1e-3, sync_s=2e-3)
+    trace.meta["measured"] = {"wall_s": t, "sync_count": 6,
+                              "sync_steps": list(range(6))}
+    r = replay(trace)
+    assert r.priced_from == "warm_means"
+    v = validate(trace)
+    assert v["ok"] and v["ratio"] == pytest.approx(1.0)
+
+
+def test_hlo_meta_malformed_falls_back_to_warm_means():
+    for bad in ({}, {"local_step": {}},
+                {"local_step": {"optimal_s": 0.0},
+                 "sync_step": {"optimal_s": 1.0}},
+                {"local_step": {"optimal_s": "x"},
+                 "sync_step": {"optimal_s": 1.0}}):
+        trace = _hand_trace()
+        trace.meta["hlo_cost"] = bad
+        r = replay(trace)
+        assert r.priced_from == "warm_means"
+        assert r.sync_overhead_s == pytest.approx(4.0)
+
+
+def test_recorded_trace_carries_hlo_cost_and_health_args(fixed_h_run):
+    # train --trace attaches the per-region cost tables and the health
+    # numbers; the gate validates at the tighter HLO-priced tolerance
+    _, trace = fixed_h_run
+    hc = trace.meta.get("hlo_cost")
+    assert hc, "train --trace should attach HLO region costs on CPU"
+    for key in ("local_step", "sync_step"):
+        tab = hc[key]
+        assert tab["optimal_s"] > 0 and tab["n_regions"] >= 1
+        # kept rows + dropped tail account for every region's optimal_s
+        kept = sum(r["optimal_s"] for r in tab["regions"])
+        assert kept + tab["dropped_optimal_s"] <= tab["optimal_s"] * (1 + 1e-9)
+    steps = trace.by_name("local_step")
+    assert all("grad_norm" in s.args and "b2" in s.args for s in steps)
+    assert all(s.args["hlo_optimal_s"] ==
+               pytest.approx(hc["local_step"]["optimal_s"]) for s in steps)
+    enc = trace.by_name("ef_encode")
+    assert enc and all("hlo_extra_optimal_s" in s.args for s in enc)
+    v = validate(trace, tol=0.05)
+    assert v["priced_from"] == "hlo_regions"
+    assert v["ok"], v
+
+
+def test_health_span_args_roundtrip_chrome(fixed_h_run):
+    # the b2/grad_norm span args survive the Chrome export round-trip
+    _, trace = fixed_h_run
+    again = from_chrome(to_chrome(trace))
+    a = [s for s in again.by_name("local_step")][0]
+    b = [s for s in trace.by_name("local_step")][0]
+    assert a.args["grad_norm"] == b.args["grad_norm"]
+    assert a.args["b2"] == b.args["b2"]
